@@ -1,0 +1,112 @@
+"""Beyond-paper ablations on the faithful HTL layer.
+
+1. Global-model update rate (our EMA interpretation of the paper's
+   "update the model elaborated until the previous time slot").
+2. Center-election policy for StarHTL (paper: max label entropy) vs
+   max-data and random election.
+3. Source-pool ablation: does including the previous global model as a
+   GreedyTL source (the incremental mechanism) actually matter?
+
+    PYTHONPATH=src python -m benchmarks.ablations [--windows 40]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro.core.scenario import ScenarioConfig, run_scenario
+from repro.data.synthetic_covtype import make_covtype_like
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "benchmarks")
+
+
+def ema_ablation(data, windows, seeds=2):
+    out = {}
+    for eta in (1.0, 0.5, 0.3, 0.15):
+        f1s = []
+        for s in range(seeds):
+            r = run_scenario(ScenarioConfig(
+                algo="star", tech="wifi", windows=windows,
+                eval_every=max(1, windows // 10), global_update_rate=eta,
+                seed=s), data)
+            f1s.append(r.converged_f1())
+        out[f"eta={eta}"] = round(float(np.mean(f1s)), 4)
+    return out
+
+
+def election_ablation(data, windows, seeds=2):
+    """Entropy election vs alternatives (monkey-patched policy)."""
+    import repro.core.htl as htl_mod
+    orig = htl_mod.label_entropy
+    out = {}
+
+    policies = {
+        "entropy (paper)": orig,
+        "max-data": lambda y, k: float(len(y)),
+        "random": lambda y, k: float(np.random.default_rng(len(y))
+                                     .random()),
+    }
+    try:
+        for name, fn in policies.items():
+            htl_mod.label_entropy = fn
+            f1s = []
+            for s in range(seeds):
+                r = run_scenario(ScenarioConfig(
+                    algo="star", tech="wifi", windows=windows,
+                    eval_every=max(1, windows // 10), seed=s), data)
+                f1s.append(r.converged_f1())
+            out[name] = round(float(np.mean(f1s)), 4)
+    finally:
+        htl_mod.label_entropy = orig
+    return out
+
+
+def prev_model_source_ablation(data, windows, seeds=2):
+    """Drop the previous global model from the GreedyTL source pool."""
+    import repro.core.htl as htl_mod
+    out = {}
+    orig_refine = htl_mod._greedy_refine
+
+    for label, drop in (("with prev-global source (ours)", False),
+                        ("without prev-global source", True)):
+        if drop:
+            def patched(dc, sources, cap, num_classes):
+                return orig_refine(dc, sources[:-1] if len(sources) > 1
+                                   else sources, cap, num_classes)
+            htl_mod._greedy_refine = patched
+        try:
+            f1s = []
+            for s in range(seeds):
+                r = run_scenario(ScenarioConfig(
+                    algo="star", tech="wifi", windows=windows,
+                    eval_every=max(1, windows // 10), seed=s), data)
+                f1s.append(r.converged_f1())
+            out[label] = round(float(np.mean(f1s)), 4)
+        finally:
+            htl_mod._greedy_refine = orig_refine
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--windows", type=int, default=40)
+    args = ap.parse_args()
+    data = make_covtype_like(seed=0)
+    out = {
+        "ema_rate": ema_ablation(data, args.windows),
+        "election": election_ablation(data, args.windows),
+        "prev_model_source": prev_model_source_ablation(data, args.windows),
+    }
+    print(json.dumps(out, indent=1))
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "ablations.json"), "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,148 @@
+"""Benchmark driver. One section per paper table/figure + framework benches.
+
+Prints ``name,us_per_call,derived`` CSV rows; full numeric payloads are
+written to results/benchmarks/*.json.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-tables]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def bench_paper_tables(quick: bool):
+    from benchmarks.paper_tables import run_all
+    t0 = time.time()
+    out = run_all(quick=quick)
+    dt = (time.time() - t0) * 1e6
+    rows = []
+    ref = out["fig2_edge_only"]
+    rows.append(("fig2_edge_only", dt, f"E={ref['energy_mj']:.0f}mJ "
+                 f"F1={ref['f1']:.3f}"))
+    for k, v in out.items():
+        if isinstance(v, dict) and "gain_pct" in v:
+            rows.append((k, 0.0, f"E={v['energy_mj']:.0f}mJ "
+                         f"gain={v['gain_pct']:.1f}% F1={v['f1']:.3f} "
+                         f"loss={v['acc_loss_pct']:.1f}%"))
+    return rows
+
+
+def bench_kernels(quick: bool):
+    """Per-kernel call latency (interpret mode on CPU; numbers are
+    correctness-path timings, not TPU performance)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    q = jax.random.normal(key, (1, 4, 512, 64), jnp.float32)
+    k = jax.random.normal(key, (1, 2, 512, 64), jnp.float32)
+    v = jax.random.normal(key, (1, 2, 512, 64), jnp.float32)
+    f = lambda: ops.flash_attention(q, k, v, causal=True)
+    f()
+    t0 = time.time()
+    n = 3
+    for _ in range(n):
+        jax.block_until_ready(f())
+    rows.append(("kernel_flash_attention_512", (time.time() - t0) / n * 1e6,
+                 "interpret"))
+
+    x = jax.random.normal(key, (1, 512, 4, 64), jnp.float32)
+    dt_ = jax.nn.softplus(jax.random.normal(key, (1, 512, 4)))
+    A = -jnp.exp(jax.random.normal(key, (4,)) * 0.5)
+    Bm = jax.random.normal(key, (1, 512, 64)) * 0.5
+    Cm = jax.random.normal(key, (1, 512, 64)) * 0.5
+    f = lambda: ops.ssd_scan(x, dt_, A, Bm, Cm, chunk=128)
+    f()
+    t0 = time.time()
+    for _ in range(n):
+        jax.block_until_ready(f())
+    rows.append(("kernel_ssd_scan_512", (time.time() - t0) / n * 1e6,
+                 "interpret"))
+
+    a = jax.nn.sigmoid(jax.random.normal(key, (1, 512, 128)))
+    b = jax.random.normal(key, (1, 512, 128)) * 0.5
+    f = lambda: ops.rglru_scan(a, b)
+    f()
+    t0 = time.time()
+    for _ in range(n):
+        jax.block_until_ready(f())
+    rows.append(("kernel_rglru_scan_512", (time.time() - t0) / n * 1e6,
+                 "interpret"))
+    return rows
+
+
+def bench_htl_trainer(quick: bool):
+    """Paper's technique at LM scale: DCN traffic vs sync baseline."""
+    import dataclasses
+
+    import jax
+    from repro.configs import get_config
+    from repro.configs.base import HTLConfig, OptimizerConfig
+    from repro.core.htl_trainer import HTLTrainer
+    from repro.models import build_model
+
+    cfg = get_config("llama3.2-3b").reduced()
+    cfg = dataclasses.replace(cfg, num_layers=2, d_model=64, num_heads=2,
+                              num_kv_heads=2, head_dim=32, d_ff=128,
+                              vocab_size=256)
+    model = build_model(cfg)
+    rows = []
+    for mode in ("a2a", "star"):
+        for H in (8, 32):
+            htl = HTLConfig(mode=mode, num_collectors=4, local_steps=H)
+            tr = HTLTrainer(model, OptimizerConfig(), htl)
+            t = tr.round_traffic_bytes()
+            rows.append((f"htl_traffic_{mode}_H{H}", 0.0,
+                         f"ratio_vs_sync={t['traffic_ratio_vs_sync']:.3f}"))
+    return rows
+
+
+def bench_dryrun_summary(quick: bool):
+    """Roofline headline numbers from the cached dry-run records."""
+    from repro.roofline.report import analyze, load_records
+    d = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+    rows = []
+    if not os.path.isdir(d):
+        return [("dryrun_summary", 0.0, "no dry-run cache; run "
+                 "python -m repro.launch.dryrun --all")]
+    recs = [r for r in load_records(d) if r["status"] == "ok"]
+    doms = {}
+    for r in recs:
+        a = analyze(r)
+        doms[a["dominant"]] = doms.get(a["dominant"], 0) + 1
+    rows.append(("dryrun_combos_ok", 0.0, f"n={len(recs)} dominant={doms}"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--skip-tables", action="store_true")
+    args, _ = ap.parse_known_args()
+
+    print("name,us_per_call,derived")
+    sections = [bench_kernels, bench_htl_trainer, bench_dryrun_summary]
+    if not args.skip_tables:
+        sections.insert(0, bench_paper_tables)
+    for fn in sections:
+        try:
+            for name, us, derived in fn(args.quick):
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:              # noqa: BLE001
+            print(f"{fn.__name__},0,ERROR:{e}")
+            raise
+
+
+if __name__ == "__main__":
+    main()

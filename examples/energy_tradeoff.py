@@ -1,0 +1,51 @@
+"""Sweep the paper's central trade-off: energy vs accuracy as a function of
+how much data reaches the edge server, which radio links the mules use, and
+the HTL variant. Prints a small ASCII table (the analogue of paper Fig. 3 +
+Tables 2-4).
+
+    PYTHONPATH=src python examples/energy_tradeoff.py --windows 30
+"""
+import argparse
+import dataclasses
+
+from repro.core.scenario import ScenarioConfig, run_scenario
+from repro.data.synthetic_covtype import make_covtype_like
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--windows", type=int, default=30)
+    args = ap.parse_args()
+    data = make_covtype_like(seed=0)
+    base = ScenarioConfig(windows=args.windows,
+                          eval_every=max(1, args.windows // 5))
+
+    edge = run_scenario(dataclasses.replace(base, algo="edge_only"), data)
+    rows = [("edge-only (NB-IoT)", edge)]
+    for pe in (0.5, 0.15, 0.03):
+        rows.append((f"star 4g, {int(pe * 100)}% on edge",
+                     run_scenario(dataclasses.replace(
+                         base, algo="star", p_edge=pe), data)))
+    for algo in ("a2a", "star"):
+        for tech in ("4g", "wifi"):
+            rows.append((f"{algo} {tech}, 0% on edge",
+                         run_scenario(dataclasses.replace(
+                             base, algo=algo, tech=tech), data)))
+            rows.append((f"{algo} {tech} + aggregation",
+                         run_scenario(dataclasses.replace(
+                             base, algo=algo, tech=tech, aggregate=True),
+                             data)))
+
+    e0, f0 = edge.energy_total, edge.converged_f1()
+    print(f"{'configuration':28s} {'energy mJ':>10s} {'saving':>7s} "
+          f"{'F1':>6s} {'loss':>6s}")
+    for name, r in rows:
+        sav = 100 * (1 - r.energy_total / e0)
+        loss = 100 * (f0 - r.converged_f1()) / f0
+        bar = "#" * int(max(0.0, sav) // 4)
+        print(f"{name:28s} {r.energy_total:10.0f} {sav:6.1f}% "
+              f"{r.converged_f1():6.3f} {loss:5.1f}%  {bar}")
+
+
+if __name__ == "__main__":
+    main()

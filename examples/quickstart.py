@@ -1,0 +1,45 @@
+"""Quickstart: the paper in one script.
+
+Reproduces the core claim — HTL-based distributed learning among SmartMules
+saves ~90+% of communication energy vs shipping everything to the edge
+server over NB-IoT, at a few percent accuracy loss.
+
+    PYTHONPATH=src python examples/quickstart.py [--windows 40]
+"""
+import argparse
+import dataclasses
+
+from repro.core.scenario import ScenarioConfig, run_scenario
+from repro.data.synthetic_covtype import make_covtype_like
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--windows", type=int, default=40)
+    args = ap.parse_args()
+
+    data = make_covtype_like(seed=0)
+    base = ScenarioConfig(windows=args.windows,
+                          eval_every=max(1, args.windows // 8))
+
+    print("== Edge-Only benchmark (all data -> ES over NB-IoT) ==")
+    edge = run_scenario(dataclasses.replace(base, algo="edge_only"), data)
+    print(f"   F1 curve: {[round(f, 3) for f in edge.f1_curve]}")
+    print(f"   energy:   {edge.energy_total:8.0f} mJ")
+
+    for algo, tech in [("star", "wifi"), ("a2a", "wifi"), ("star", "4g")]:
+        r = run_scenario(dataclasses.replace(base, algo=algo, tech=tech,
+                                             aggregate=True), data)
+        gain = 100 * (1 - r.energy_total / edge.energy_total)
+        loss = 100 * (edge.converged_f1() - r.converged_f1()) \
+            / edge.converged_f1()
+        print(f"== {algo.upper():4s} + {tech:4s} + aggregation ==")
+        print(f"   F1 curve: {[round(f, 3) for f in r.f1_curve]}")
+        print(f"   energy:   {r.energy_total:8.0f} mJ "
+              f"(saving {gain:.1f}%, accuracy loss {loss:.1f}%)")
+        print(f"   breakdown: collection {r.energy_collection:.0f} mJ, "
+              f"learning {r.energy_learning:.0f} mJ")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.checkpoint.checkpointer import save_checkpoint, load_checkpoint  # noqa: F401

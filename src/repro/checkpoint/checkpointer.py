@@ -1,0 +1,79 @@
+"""Minimal sharding-aware checkpointer (msgpack index + npz payloads).
+
+No orbax in this environment. Layout:
+    <dir>/index.msgpack   — treedef paths, shapes, dtypes, step metadata
+    <dir>/arrays.npz      — flat arrays keyed by joined path
+
+Arrays are gathered to host before saving (single-host container); the index
+records the PartitionSpec string so a multi-host restore knows the intended
+sharding.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_checkpoint(ckpt_dir: str, tree: Any, step: int = 0,
+                    pspecs: Any = None) -> None:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    leaves = jax.tree.flatten_with_path(tree)[0]
+    arrays = {}
+    index = {"step": step, "leaves": []}
+    spec_leaves = None
+    if pspecs is not None:
+        spec_leaves = [s for _, s in jax.tree.flatten_with_path(
+            pspecs, is_leaf=lambda x: x is None or not isinstance(x, (dict, list, tuple))
+        )[0]]
+    for i, (path, leaf) in enumerate(leaves):
+        key = _path_str(path)
+        arr = np.asarray(jax.device_get(leaf))
+        arrays[key] = arr
+        index["leaves"].append({
+            "path": key, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "pspec": str(spec_leaves[i]) if spec_leaves else "",
+        })
+    np.savez(os.path.join(ckpt_dir, "arrays.npz"), **arrays)
+    with open(os.path.join(ckpt_dir, "index.msgpack"), "wb") as f:
+        f.write(msgpack.packb(index))
+
+
+def load_checkpoint(ckpt_dir: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (a pytree of arrays)."""
+    with open(os.path.join(ckpt_dir, "index.msgpack"), "rb") as f:
+        index = msgpack.unpackb(f.read())
+    npz = np.load(os.path.join(ckpt_dir, "arrays.npz"))
+    paths, treedef = jax.tree.flatten_with_path(like)
+    out = []
+    for path, leaf in paths:
+        key = _path_str(path)
+        arr = npz[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch at {key}: ckpt {arr.shape} vs "
+                             f"target {leaf.shape}")
+        out.append(arr.astype(leaf.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def checkpoint_step(ckpt_dir: str) -> Optional[int]:
+    try:
+        with open(os.path.join(ckpt_dir, "index.msgpack"), "rb") as f:
+            return msgpack.unpackb(f.read())["step"]
+    except FileNotFoundError:
+        return None

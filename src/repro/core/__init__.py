@@ -1,0 +1,11 @@
+"""The paper's primary contribution: HTL-based distributed learning with
+energy accounting (faithful layer), plus the datacenter-scale hypothesis-
+transfer trainer (`htl_trainer`, the TPU-native adaptation — DESIGN.md §3).
+"""
+from repro.core.energy import Ledger, TECHS, MODEL_BYTES, OBS_BYTES  # noqa: F401
+from repro.core.htl import DC, run_window_a2a, run_window_star  # noqa: F401
+from repro.core.scenario import (  # noqa: F401
+    ScenarioConfig,
+    ScenarioResult,
+    run_scenario,
+)

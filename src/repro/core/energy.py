@@ -1,0 +1,108 @@
+"""Energy model (paper Section 5.2, Table 1).
+
+``E = P * t`` with ``t = S / B`` — power (mW) times transfer duration. Every
+logical transfer is recorded in an event ledger, split by purpose
+(collection vs learning), so the per-table breakdowns (paper Tables 2-6) come
+straight out of the ledger.
+
+Accounting conventions (the paper leaves these implicit; see DESIGN.md §2):
+
+* Only battery-powered endpoints are counted. The edge server is mains
+  powered: transfers to it count the device's tx only; transfers *from* it
+  count the device's rx only.
+* 4G/NB-IoT go through infrastructure: one tx + one rx per unicast.
+* 802.11g uses a WiFi-Direct-style star topology: one mule is the Access
+  Point. A unicast between two non-AP mules is relayed: 2 tx + 2 rx, all on
+  battery. If the AP is an endpoint: 1 tx + 1 rx.
+* Observations on the wire are 54 float64 features + 1-byte label (433 B,
+  calibrated to the paper's 34 477 mJ Edge-Only benchmark); models are
+  float32 (7 x 55 x 4 = 1 540 B).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+
+@dataclass(frozen=True)
+class Tech:
+    name: str
+    tx_mw: float
+    up_mbps: float
+    rx_mw: float
+    down_mbps: float
+
+    def tx_mj(self, nbytes: float) -> float:
+        return self.tx_mw * (nbytes * 8.0 / (self.up_mbps * 1e6))
+
+    def rx_mj(self, nbytes: float) -> float:
+        return self.rx_mw * (nbytes * 8.0 / (self.down_mbps * 1e6))
+
+
+# Table 1 of the paper
+TECHS: Dict[str, Tech] = {
+    "4g": Tech("4g", 2100.0, 75.0, 2100.0, 35.0),
+    "nbiot": Tech("nbiot", 199.0, 0.2, 199.52, 0.2),
+    "802.15.4": Tech("802.15.4", 3.0, 0.12, 3.0, 0.12),
+    "wifi": Tech("wifi", 1080.0, 48.0, 740.0, 48.0),
+}
+
+OBS_BYTES = 54 * 8 + 1        # 433 B (calibrated, DESIGN.md §2)
+MODEL_BYTES = 55 * 7 * 4      # 1 540 B linear model, float32
+INDEX_BYTES = 8               # entropy index / center id messages
+
+
+@dataclass
+class Ledger:
+    events: List[dict] = field(default_factory=list)
+
+    def add(self, tech: str, nbytes: float, *, purpose: str,
+            n_tx: int = 1, n_rx: int = 1, what: str = "") -> float:
+        t = TECHS[tech]
+        mj = n_tx * t.tx_mj(nbytes) + n_rx * t.rx_mj(nbytes)
+        self.events.append({"tech": tech, "bytes": nbytes, "purpose": purpose,
+                            "n_tx": n_tx, "n_rx": n_rx, "mj": mj,
+                            "what": what})
+        return mj
+
+    # -- high-level events ---------------------------------------------------
+    def collect_to_edge(self, n_obs: int) -> float:
+        """Sensor -> edge server over NB-IoT (tx only; ES is mains powered)."""
+        return self.add("nbiot", n_obs * OBS_BYTES, purpose="collection",
+                        n_tx=1, n_rx=0, what="sensor->ES")
+
+    def collect_to_mule(self, n_obs: int) -> float:
+        """Sensor -> SmartMule over 802.15.4 (both endpoints on battery)."""
+        return self.add("802.15.4", n_obs * OBS_BYTES, purpose="collection",
+                        n_tx=1, n_rx=1, what="sensor->SM")
+
+    def unicast(self, tech: str, nbytes: float, *, src_is_es=False,
+                dst_is_es=False, src_is_ap=False, dst_is_ap=False,
+                purpose="learning", what="model") -> float:
+        """One unicast between Data Collectors under the conventions above."""
+        if tech == "wifi" and not (src_is_es or dst_is_es):
+            hops = 1 if (src_is_ap or dst_is_ap) else 2
+            return self.add("wifi", nbytes, purpose=purpose,
+                            n_tx=hops, n_rx=hops, what=what)
+        n_tx = 0 if src_is_es else 1
+        n_rx = 0 if dst_is_es else 1
+        return self.add(tech, nbytes, purpose=purpose, n_tx=n_tx, n_rx=n_rx,
+                        what=what)
+
+    # -- summaries -----------------------------------------------------------
+    def total(self, purpose: str = None) -> float:
+        return sum(e["mj"] for e in self.events
+                   if purpose is None or e["purpose"] == purpose)
+
+    def by_purpose(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for e in self.events:
+            out[e["purpose"]] = out.get(e["purpose"], 0.0) + e["mj"]
+        return out
+
+    def by_tech(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for e in self.events:
+            out[e["tech"]] = out.get(e["tech"], 0.0) + e["mj"]
+        return out

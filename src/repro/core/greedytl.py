@@ -1,0 +1,138 @@
+"""GreedyTL — transfer learning through greedy source selection
+(Kuzborskij, Orabona, Caputo, ICIAP 2015 [28] / CVIU 2017 [37]).
+
+The paper (Section 4, Step 2) describes it as solving "an optimisation
+problem to find the linear combination of models m(0) which maximises the
+prediction accuracy with respect to the local dataset". We implement exactly
+that, in two regularized-least-squares stages, both gated by the closed-form
+leave-one-out (LOO) error — the selection criterion of [28]:
+
+* **Stage 1 — greedy source combination.** Candidate pool = source
+  hypotheses; each source j enters with a single scalar coefficient alpha_j
+  shared across classes (this preserves the source's cross-class calibration
+  — the multiclass adaptation of the binary algorithm in [28]). Exact greedy
+  forward selection: at every step each remaining source is trial-added and
+  the LOO error of the joint ridge recomputed; the best is kept only if it
+  improves.
+* **Stage 2 — local correction.** A per-class ridge over the original
+  features fits the residual; it is kept only if it improves the stacked LOO
+  error (with few local samples it usually is not — which is exactly why
+  GreedyTL works with 2-10 points per class, paper Section 7).
+
+Because the base hypotheses are linear (paper: linear SVM), the result
+collapses EXACTLY into one linear model:
+
+    w_eff = sum_j (alpha_j / s_j) W_src_j + W_correction (+ biases)
+
+so the deployed model is identical to the fitted one, the on-wire model size
+stays constant, and the paper's Step-4 averaging is well-posed.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.svm import svm_scores
+
+
+def _loo_ridge(A, y, rmask, cmask, lam):
+    """Ridge with LOO error. A: (R,D); y: (R,); rmask: (R,); cmask: (D,).
+
+    ``lam`` may be a scalar or a per-column vector (D,) — the per-class bias
+    columns get a stronger penalty so that a few samples per class cannot
+    shift a good source's decision boundaries.
+    Returns (loo_sse, coeffs (D,)).
+    """
+    Am = A * cmask[None, :] * rmask[:, None]
+    D = A.shape[1]
+    G = Am.T @ Am + jnp.diag(jnp.broadcast_to(lam, (D,)) + 1e-4)
+    Ginv = jnp.linalg.inv(G)
+    v = (Ginv @ (Am.T @ (y * rmask))) * cmask
+    resid = (Am @ v - y) * rmask
+    h = jnp.sum((Am @ Ginv) * Am, axis=-1)
+    loo = resid / jnp.maximum(1.0 - h, 0.1)
+    return jnp.sum(loo ** 2), v
+
+
+@partial(jax.jit, static_argnames=("num_classes", "k_max"))
+def greedytl(x, y, mask, src_w, src_mask, *, num_classes: int,
+             lam_src: float = 0.1, lam_x: float = 10.0,
+             lam_bias: float = 2.0, k_max: int = 16, lam: float = None):
+    """Greedy source combination + gated local correction (see module doc).
+
+    x: (n, F) padded local data; y: (n,); mask: (n,) row validity.
+    src_w: (M, F+1, C) stacked source hypotheses; src_mask: (M,).
+    Returns (w_eff (F+1, C), selected (M,) 0/1 source-selection mask).
+    """
+    if lam is not None:           # backwards-compatible alias
+        lam_src = lam
+    n, F = x.shape
+    M, _, C = src_w.shape
+    xm = x * mask[:, None]
+    Yoh = (2.0 * jax.nn.one_hot(y, num_classes) - 1.0) * mask[:, None]  # (n,C)
+
+    # source predictions H (M, n, C), normalised per source to unit RMS
+    H = jax.vmap(lambda w: svm_scores(w, xm))(src_w) * mask[None, :, None]
+    denom = jnp.maximum(1.0, jnp.sum(mask)) * C
+    s = jnp.sqrt(jnp.sum(H ** 2, axis=(1, 2)) / denom) + 1e-6    # (M,)
+    Hn = H / s[:, None, None]
+
+    # ---- Stage 1: stacked system over (n*C) rows, unknowns = alpha + bias_c
+    R = n * C
+    A_src = Hn.transpose(1, 2, 0).reshape(R, M)          # (R, M)
+    A_bias = jnp.tile(jnp.eye(C), (n, 1))                # (R, C)
+    A = jnp.concatenate([A_src, A_bias], axis=1)         # (R, M+C)
+    yr = Yoh.reshape(R)
+    rmask = jnp.repeat(mask, C)
+    bias_cols = jnp.concatenate([jnp.zeros(M), jnp.ones(C)])
+    lam_vec = jnp.concatenate([jnp.full((M,), lam_src),
+                               jnp.full((C,), lam_bias)])
+
+    def greedy_step(state, _):
+        sel, best, done = state
+
+        def trial(j):
+            cand = jnp.where(jnp.arange(M) == j, 1.0, sel) * src_mask
+            cm = jnp.concatenate([cand, jnp.ones(C)])
+            obj, _ = _loo_ridge(A, yr, rmask, cm, lam_vec)
+            invalid = (sel[j] > 0) | (src_mask[j] == 0)
+            return jnp.where(invalid, jnp.inf, obj)
+
+        objs = jax.vmap(trial)(jnp.arange(M))
+        j = jnp.argmin(objs)
+        improved = (objs[j] < best) & ~done
+        sel = jnp.where(improved, jnp.where(jnp.arange(M) == j, 1.0, sel),
+                        sel)
+        return (sel, jnp.where(improved, objs[j], best),
+                done | ~improved), None
+
+    obj0, _ = _loo_ridge(A, yr, rmask, bias_cols, lam_vec)
+    (sel, _, _), _ = jax.lax.scan(
+        greedy_step, (jnp.zeros(M), obj0, jnp.asarray(False)), None,
+        length=min(k_max, M))
+
+    cm = jnp.concatenate([sel * src_mask, jnp.ones(C)])
+    _, v1 = _loo_ridge(A, yr, rmask, cm, lam_vec)
+    alpha = v1[:M] / s                                   # undo normalisation
+    bias1 = v1[M:]                                       # (C,)
+
+    w_src_part = jnp.einsum("m,mfc->fc", alpha, src_w)   # (F+1, C)
+    w_src_part = w_src_part.at[F].add(bias1)
+
+    # ---- Stage 2: per-class local correction on the residual, LOO-gated
+    fitted = jnp.einsum("m,mnc->nc", v1[:M], Hn) + bias1[None, :]
+    resid = (Yoh - fitted) * mask[:, None]               # (n, C)
+
+    def fit_class(rc):
+        return _loo_ridge(xm, rc, mask, jnp.ones(F), lam_x)
+
+    loo_x, Vx = jax.vmap(fit_class, in_axes=1, out_axes=(0, 0))(resid)
+    # gate: correction kept only if summed LOO improves over zero correction
+    loo_zero = jnp.sum(resid ** 2)
+    keep = jnp.sum(loo_x) < loo_zero
+    Vx = jnp.where(keep, Vx.T, 0.0)                      # (F, C)
+
+    w_eff = w_src_part.at[:F].add(Vx)
+    return w_eff, sel

@@ -1,0 +1,215 @@
+"""A2AHTL and StarHTL (paper Algorithms 1 & 2) over an energy ledger.
+
+Each window, every Data Collector (DC) holds a disjoint local dataset.
+A2AHTL: local SVM -> all-to-all model exchange -> GreedyTL at every DC ->
+gather refined models at one DC -> average. StarHTL: local SVM -> entropy
+based center election -> models to the center only -> GreedyTL at the center.
+
+All model transfers, index exchanges and raw-data aggregations are charged to
+the :class:`~repro.core.energy.Ledger` under the technology conventions in
+``energy.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.energy import INDEX_BYTES, Ledger, MODEL_BYTES, OBS_BYTES
+from repro.core.greedytl import greedytl
+from repro.core.svm import pad_local, train_svm
+
+M_CAP = 16        # max source hypotheses per GreedyTL call (padded, masked)
+
+
+@dataclass
+class DC:
+    name: str
+    x: np.ndarray
+    y: np.ndarray
+    is_es: bool = False
+
+    @property
+    def n(self) -> int:
+        return len(self.y)
+
+
+def label_entropy(y: np.ndarray, num_classes: int) -> float:
+    """Information entropy with log base |K| (paper Section 4, StarHTL)."""
+    if len(y) == 0:
+        return 0.0
+    counts = np.bincount(y, minlength=num_classes).astype(np.float64)
+    p = counts / counts.sum()
+    p = p[p > 0]
+    return float(-(p * np.log(p) / np.log(num_classes)).sum())
+
+
+def _train_base(dc: DC, cap: int, num_classes: int) -> np.ndarray:
+    x, y, m = pad_local(dc.x, dc.y, cap)
+    w = train_svm(jnp.asarray(x), jnp.asarray(y), jnp.asarray(m),
+                  num_classes=num_classes)
+    return np.asarray(w)
+
+
+def _subsample(dc: DC, n_per_class: Optional[int], num_classes: int,
+               rng: np.random.Generator) -> DC:
+    """Paper Section 7: GreedyTL retrained on n points per class."""
+    if n_per_class is None or dc.n == 0:
+        return dc
+    keep = []
+    for c in range(num_classes):
+        idx = np.where(dc.y == c)[0]
+        if len(idx) > n_per_class:
+            idx = rng.choice(idx, n_per_class, replace=False)
+        keep.append(idx)
+    keep = np.concatenate(keep) if keep else np.arange(0)
+    return dataclasses.replace(dc, x=dc.x[keep], y=dc.y[keep])
+
+
+def _greedy_refine(dc: DC, sources: List[np.ndarray], cap: int,
+                   num_classes: int) -> np.ndarray:
+    x, y, m = pad_local(dc.x, dc.y, cap)
+    M = len(sources)
+    F = x.shape[1]
+    src = np.zeros((M_CAP, F + 1, num_classes), np.float32)
+    src_mask = np.zeros((M_CAP,), np.float32)
+    for i, w in enumerate(sources[:M_CAP]):
+        src[i] = w
+        src_mask[i] = 1.0
+    w_eff, _ = greedytl(jnp.asarray(x), jnp.asarray(y), jnp.asarray(m),
+                        jnp.asarray(src), jnp.asarray(src_mask),
+                        num_classes=num_classes)
+    return np.asarray(w_eff)
+
+
+def apply_aggregation_heuristic(dcs: List[DC], ledger: Ledger, tech: str
+                                ) -> List[DC]:
+    """Paper Section 6.3: DCs with local data below 2x the model size ship
+    raw data to one of them (the largest under-provisioned mule), which alone
+    joins the learning round."""
+    thresh_obs = int(np.ceil(2 * MODEL_BYTES / OBS_BYTES))
+    small = [d for d in dcs if not d.is_es and d.n < thresh_obs]
+    big = [d for d in dcs if d.is_es or d.n >= thresh_obs]
+    if len(small) <= 1:
+        return dcs
+    small.sort(key=lambda d: -d.n)
+    sink = small[0]
+    xs, ys = [sink.x], [sink.y]
+    ap = max((d for d in dcs if not d.is_es), key=lambda d: d.n, default=None)
+    for d in small[1:]:
+        if d.n == 0:
+            continue
+        ledger.unicast(tech, d.n * OBS_BYTES, purpose="learning",
+                       src_is_ap=(ap is not None and d.name == ap.name),
+                       dst_is_ap=(ap is not None and sink.name == ap.name),
+                       what="raw-data aggregation")
+        xs.append(d.x)
+        ys.append(d.y)
+    merged = DC(sink.name, np.concatenate(xs), np.concatenate(ys))
+    return big + [merged]
+
+
+def _ap_name(dcs: List[DC]) -> Optional[str]:
+    mules = [d for d in dcs if not d.is_es]
+    if not mules:
+        return None
+    return max(mules, key=lambda d: d.n).name
+
+
+def run_window_a2a(dcs: List[DC], prev_global: Optional[np.ndarray],
+                   ledger: Ledger, tech: str, *, cap: int, num_classes: int,
+                   n_subsample: Optional[int] = None,
+                   rng: Optional[np.random.Generator] = None) -> np.ndarray:
+    """One A2AHTL round (Algorithm 1). Returns the new global model."""
+    rng = rng or np.random.default_rng(0)
+    dcs = [d for d in dcs if d.n > 0]
+    if not dcs:
+        return prev_global
+    ap = _ap_name(dcs)
+
+    base = {d.name: _train_base(d, cap, num_classes) for d in dcs}
+    if len(dcs) == 1:
+        only = base[dcs[0].name]
+        return only if prev_global is None else 0.5 * (only + prev_global)
+
+    # Step 1: every DC sends its base model to every other DC
+    for src in dcs:
+        for dst in dcs:
+            if src.name == dst.name:
+                continue
+            ledger.unicast(tech, MODEL_BYTES, src_is_es=src.is_es,
+                           dst_is_es=dst.is_es, src_is_ap=src.name == ap,
+                           dst_is_ap=dst.name == ap, what="m0 exchange")
+
+    # Step 2: GreedyTL at every DC (prev global model joins the source pool)
+    refined = []
+    for d in dcs:
+        sources = [base[o.name] for o in dcs]
+        if prev_global is not None:
+            sources = sources + [prev_global]
+        refined.append(_greedy_refine(_subsample(d, n_subsample, num_classes,
+                                                 rng),
+                                      sources, cap, num_classes))
+
+    # Step 3: send refined models to one DC (the AP / largest mule)
+    center = next((d for d in dcs if d.name == ap), dcs[0])
+    for d in dcs:
+        if d.name == center.name:
+            continue
+        ledger.unicast(tech, MODEL_BYTES, src_is_es=d.is_es,
+                       dst_is_es=center.is_es, src_is_ap=d.name == ap,
+                       dst_is_ap=center.name == ap, what="m1 gather")
+
+    # Step 4: average
+    return np.mean(np.stack(refined), axis=0)
+
+
+def run_window_star(dcs: List[DC], prev_global: Optional[np.ndarray],
+                    ledger: Ledger, tech: str, *, cap: int, num_classes: int,
+                    n_subsample: Optional[int] = None,
+                    rng: Optional[np.random.Generator] = None) -> np.ndarray:
+    """One StarHTL round (Algorithm 2)."""
+    rng = rng or np.random.default_rng(0)
+    dcs = [d for d in dcs if d.n > 0]
+    if not dcs:
+        return prev_global
+    ap = _ap_name(dcs)
+
+    base = {d.name: _train_base(d, cap, num_classes) for d in dcs}
+    if len(dcs) == 1:
+        only = base[dcs[0].name]
+        return only if prev_global is None else 0.5 * (only + prev_global)
+
+    # Step 1: entropy index exchange + center id broadcast (tiny messages)
+    for src in dcs:
+        for dst in dcs:
+            if src.name == dst.name:
+                continue
+            ledger.unicast(tech, INDEX_BYTES, src_is_es=src.is_es,
+                           dst_is_es=dst.is_es, src_is_ap=src.name == ap,
+                           dst_is_ap=dst.name == ap, what="entropy index")
+    center = max(dcs, key=lambda d: label_entropy(d.y, num_classes))
+    for dst in dcs:
+        if dst.name == center.name:
+            continue
+        ledger.unicast(tech, INDEX_BYTES, src_is_es=center.is_es,
+                       dst_is_es=dst.is_es, src_is_ap=center.name == ap,
+                       dst_is_ap=dst.name == ap, what="center id")
+
+    # Step 2: base models to the center only
+    for d in dcs:
+        if d.name == center.name:
+            continue
+        ledger.unicast(tech, MODEL_BYTES, src_is_es=d.is_es,
+                       dst_is_es=center.is_es, src_is_ap=d.name == ap,
+                       dst_is_ap=center.name == ap, what="m0 to center")
+
+    # Step 3: GreedyTL at the center only
+    sources = [base[d.name] for d in dcs]
+    if prev_global is not None:
+        sources = sources + [prev_global]
+    return _greedy_refine(_subsample(center, n_subsample, num_classes, rng),
+                          sources, cap, num_classes)

@@ -1,0 +1,32 @@
+"""Performance metrics exactly as defined in the paper (Section 5.2).
+
+Precision (eq. 3) is the *overall accuracy* (the paper's idiosyncratic
+definition), recall (eq. 4) is macro-averaged per-class accuracy, and the
+F-measure (eq. 5) is their harmonic mean.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def precision(y_true: np.ndarray, y_pred: np.ndarray) -> float:
+    return float(np.mean(y_true == y_pred))
+
+
+def recall(y_true: np.ndarray, y_pred: np.ndarray, num_classes: int) -> float:
+    vals = []
+    for c in range(num_classes):
+        m = y_true == c
+        if m.sum() == 0:
+            continue
+        vals.append(float(np.mean(y_pred[m] == c)))
+    return float(np.mean(vals)) if vals else 0.0
+
+
+def f_measure(y_true: np.ndarray, y_pred: np.ndarray,
+              num_classes: int) -> float:
+    p = precision(y_true, y_pred)
+    r = recall(y_true, y_pred, num_classes)
+    if p + r == 0:
+        return 0.0
+    return 2.0 * p * r / (p + r)

@@ -1,0 +1,163 @@
+"""Scenario simulation (paper Sections 3, 5, 6).
+
+A slotted data-collection process: ``windows`` collection windows of
+``obs_per_window`` observations each. Observations are either collected by
+SmartMules (802.15.4) or shipped to the Edge Server (NB-IoT). The number of
+mules per window is Poisson(lambda); the per-mule allocation follows a Zipf
+ranking (or uniform, Scenario 3). After each window a learning round runs
+(centralised on the ES, or A2AHTL/StarHTL among the Data Collectors) and the
+global model is evaluated on the held-out test set.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.energy import Ledger
+from repro.core.htl import (DC, apply_aggregation_heuristic, run_window_a2a,
+                            run_window_star)
+from repro.core.metrics import f_measure
+from repro.core.svm import pad_local, svm_predict, train_svm
+from repro.data.synthetic_covtype import Dataset, NUM_CLASSES
+
+
+@dataclass(frozen=True)
+class ScenarioConfig:
+    windows: int = 100
+    obs_per_window: int = 100
+    lam_poisson: float = 7.0
+    zipf_alpha: float = 1.5
+    p_edge: float = 0.0           # fraction of each window shipped to the ES
+    algo: str = "star"            # 'star' | 'a2a' | 'edge_only'
+    tech: str = "4g"              # DC<->DC technology: '4g' | 'wifi'
+    uniform: bool = False         # Scenario 3: uniform allocation over mules
+    aggregate: bool = False       # data-aggregation heuristic (Section 6.3)
+    n_subsample: Optional[int] = None   # GreedyTL points per class (Sec. 7)
+    include_es_in_learning: bool = True
+    cap: int = 160                # padded local-dataset capacity
+    eval_every: int = 1
+    seed: int = 0
+    # "This model is used to update the model elaborated until the previous
+    # time slot" (paper Section 3): the window model updates the global model
+    # incrementally. We use an exponential moving average with this rate.
+    global_update_rate: float = 0.3
+
+
+@dataclass
+class ScenarioResult:
+    f1_curve: List[float]
+    ledger: Ledger
+    cfg: ScenarioConfig
+
+    @property
+    def final_f1(self) -> float:
+        return self.f1_curve[-1]
+
+    def converged_f1(self, start_frac: float = 0.5) -> float:
+        """Paper: mean F1 over the converged interval (50th-100th window)."""
+        k = int(len(self.f1_curve) * start_frac)
+        return float(np.mean(self.f1_curve[k:]))
+
+    @property
+    def energy_total(self) -> float:
+        return self.ledger.total()
+
+    @property
+    def energy_collection(self) -> float:
+        return self.ledger.total("collection")
+
+    @property
+    def energy_learning(self) -> float:
+        return self.ledger.total("learning")
+
+
+def _zipf_probs(n: int, alpha: float) -> np.ndarray:
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    p = ranks ** (-alpha)
+    return p / p.sum()
+
+
+def run_scenario(cfg: ScenarioConfig, data: Dataset) -> ScenarioResult:
+    rng = np.random.default_rng(cfg.seed)
+    ledger = Ledger()
+    n_total = cfg.windows * cfg.obs_per_window
+    order = rng.permutation(len(data.y_train))[:n_total]
+    stream_x = data.x_train[order].astype(np.float32)
+    stream_y = data.y_train[order].astype(np.int32)
+
+    f1_curve: List[float] = []
+    prev_global: Optional[np.ndarray] = None
+
+    # Edge-only: the ES accumulates everything and retrains each window
+    if cfg.algo == "edge_only":
+        xacc = np.zeros((n_total, stream_x.shape[1]), np.float32)
+        yacc = np.zeros((n_total,), np.int32)
+        macc = np.zeros((n_total,), np.float32)
+        w = None
+        for t in range(cfg.windows):
+            s = slice(t * cfg.obs_per_window, (t + 1) * cfg.obs_per_window)
+            ledger.collect_to_edge(cfg.obs_per_window)
+            xacc[s] = stream_x[s]
+            yacc[s] = stream_y[s]
+            macc[s] = 1.0
+            w = train_svm(jnp.asarray(xacc), jnp.asarray(yacc),
+                          jnp.asarray(macc), num_classes=NUM_CLASSES,
+                          iters=300,
+                          w0=None if w is None else jnp.asarray(w))
+            w = np.asarray(w)
+            if (t + 1) % cfg.eval_every == 0:
+                f1_curve.append(_eval(w, data))
+        return ScenarioResult(f1_curve, ledger, cfg)
+
+    for t in range(cfg.windows):
+        s = slice(t * cfg.obs_per_window, (t + 1) * cfg.obs_per_window)
+        wx, wy = stream_x[s], stream_y[s]
+
+        n_edge = int(round(cfg.p_edge * cfg.obs_per_window))
+        idx = rng.permutation(cfg.obs_per_window)
+        edge_idx, mule_idx = idx[:n_edge], idx[n_edge:]
+
+        L = max(1, rng.poisson(cfg.lam_poisson))
+        if cfg.uniform:
+            assign = rng.integers(0, L, size=len(mule_idx))
+        else:
+            assign = rng.choice(L, size=len(mule_idx),
+                                p=_zipf_probs(L, cfg.zipf_alpha))
+
+        dcs: List[DC] = []
+        for m in range(L):
+            sel = mule_idx[assign == m]
+            if len(sel) == 0:
+                continue
+            ledger.collect_to_mule(len(sel))
+            dcs.append(DC(f"SM{m + 1}", wx[sel], wy[sel]))
+        if n_edge > 0:
+            ledger.collect_to_edge(n_edge)
+            if cfg.include_es_in_learning:
+                dcs.append(DC("ES", wx[edge_idx], wy[edge_idx], is_es=True))
+
+        if cfg.aggregate:
+            dcs = apply_aggregation_heuristic(dcs, ledger, cfg.tech)
+
+        run = run_window_a2a if cfg.algo == "a2a" else run_window_star
+        new_global = run(dcs, prev_global, ledger, cfg.tech,
+                         cap=cfg.cap, num_classes=NUM_CLASSES,
+                         n_subsample=cfg.n_subsample, rng=rng)
+        if prev_global is None or new_global is None:
+            prev_global = new_global if new_global is not None else prev_global
+        else:
+            eta = cfg.global_update_rate
+            prev_global = (1.0 - eta) * prev_global + eta * new_global
+        if (t + 1) % cfg.eval_every == 0:
+            f1_curve.append(_eval(prev_global, data))
+
+    return ScenarioResult(f1_curve, ledger, cfg)
+
+
+def _eval(w: np.ndarray, data: Dataset) -> float:
+    pred = np.asarray(svm_predict(jnp.asarray(w),
+                                  jnp.asarray(data.x_test.astype(np.float32))))
+    return f_measure(data.y_test, pred, NUM_CLASSES)

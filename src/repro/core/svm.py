@@ -1,0 +1,70 @@
+"""Linear multiclass SVM (one-vs-rest hinge + L2), trained in JAX.
+
+This is the paper's Step-0 base learner. No sklearn in this environment —
+full-batch gradient descent with momentum on the (masked) hinge objective.
+Masking lets one jitted trainer handle every Data Collector regardless of its
+local sample count (samples are padded to a fixed capacity).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def svm_scores(w: jax.Array, x: jax.Array) -> jax.Array:
+    """w: (F+1, C) with bias row last; x: (n, F)."""
+    return x @ w[:-1] + w[-1]
+
+
+def svm_predict(w, x) -> jax.Array:
+    return jnp.argmax(svm_scores(w, x), axis=-1)
+
+
+def _hinge_loss(w, x, y_onehot_pm, mask, lam):
+    scores = svm_scores(w, x)                       # (n, C)
+    margins = jnp.maximum(0.0, 1.0 - y_onehot_pm * scores)
+    per_sample = jnp.sum(margins, axis=-1) * mask
+    denom = jnp.maximum(1.0, jnp.sum(mask))
+    return jnp.sum(per_sample) / denom + lam * jnp.sum(w[:-1] ** 2)
+
+
+@partial(jax.jit, static_argnames=("num_classes", "iters"))
+def train_svm(x: jax.Array, y: jax.Array, mask: jax.Array, *,
+              num_classes: int, lam: float = 1e-3, lr: float = 0.5,
+              iters: int = 200, w0: jax.Array = None) -> jax.Array:
+    """x: (n,F) padded; y: (n,) int labels; mask: (n,) {0,1}.
+
+    Returns w: (F+1, C). Momentum GD with cosine-decayed lr; warm start w0.
+    """
+    n, F = x.shape
+    y_pm = 2.0 * jax.nn.one_hot(y, num_classes) - 1.0
+    w_init = jnp.zeros((F + 1, num_classes)) if w0 is None else w0
+    grad_fn = jax.grad(_hinge_loss)
+
+    def body(i, carry):
+        w, v = carry
+        g = grad_fn(w, x, y_pm, mask, lam)
+        lr_i = lr * 0.5 * (1 + jnp.cos(jnp.pi * i / iters))
+        v = 0.9 * v - lr_i * g
+        return w + v, v
+
+    w, _ = jax.lax.fori_loop(0, iters, body, (w_init, jnp.zeros_like(w_init)))
+    return w
+
+
+def pad_local(x: np.ndarray, y: np.ndarray, cap: int
+              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pad a local dataset to ``cap`` rows with a validity mask."""
+    n = min(len(x), cap)
+    F = x.shape[1]
+    xp = np.zeros((cap, F), np.float32)
+    yp = np.zeros((cap,), np.int32)
+    mp = np.zeros((cap,), np.float32)
+    xp[:n] = x[:n]
+    yp[:n] = y[:n]
+    mp[:n] = 1.0
+    return xp, yp, mp

@@ -1,0 +1,2 @@
+from repro.data.synthetic_covtype import make_covtype_like  # noqa: F401
+from repro.data.pipeline import TokenStream, make_lm_batch  # noqa: F401

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the perf-critical compute hot spots.
+
+Each kernel: ``<name>.py`` (pl.pallas_call + explicit BlockSpec VMEM tiling),
+``ops.py`` (jit'd wrappers, interpret=True off-TPU), ``ref.py`` (pure-jnp
+oracles swept by tests/test_kernels.py).
+"""
+from repro.kernels import ops, ref  # noqa: F401

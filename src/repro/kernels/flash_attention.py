@@ -1,0 +1,123 @@
+"""Flash attention Pallas TPU kernel.
+
+Block-tiled online-softmax attention with causal and sliding-window masking,
+GQA-aware (KV heads indexed via the BlockSpec index map — no KV repetition in
+HBM). Targets the TPU MXU: q/k/v blocks are (block_q x head_dim) /
+(block_kv x head_dim) VMEM tiles with head_dim padded to 128-lane multiples
+by XLA; accumulation is f32 in VMEM scratch persisted across the sequential
+kv grid dimension.
+
+Validated on CPU via ``interpret=True`` against ``ref.mha_reference``
+(tests/test_kernels.py sweeps shapes and dtypes).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_kv: int, causal: bool,
+                  window: int, q_offset: int, kv_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)                 # (bkv, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    # rows past kv_len are padding (undefined memory); 0 * NaN = NaN would
+    # poison the p @ v matmul, so zero them explicitly
+    kv_valid = (ki * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_kv, 1), 0)) < kv_len
+    v = jnp.where(kv_valid, v, 0.0)
+    k = jnp.where(kv_valid, k, 0.0)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 0)
+    k_pos = ki * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 1)
+    mask = k_pos < kv_len
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[:, :1]                               # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)                      # (bq, 1)
+
+    l_scr[:, :1] = l_scr[:, :1] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(
+        p.astype(v.dtype), v).astype(jnp.float32)
+    m_scr[:, :1] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "q_offset", "block_q",
+                              "block_kv", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset: int = 0, block_q: int = 128,
+                    block_kv: int = 128, interpret: bool = False):
+    """q: (B, H, Sq, d); k, v: (B, KV, Skv, d). Returns (B, H, Sq, d).
+
+    GQA: H must be a multiple of KV; kv blocks are selected via index_map.
+    """
+    B, H, Sq, d = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    G = H // KV
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, Skv)
+    nq = pl.cdiv(Sq, bq)
+    nk = pl.cdiv(Skv, bkv)
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=bq, block_kv=bkv, causal=causal,
+        window=window, q_offset=q_offset, kv_len=Skv)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bkv, d), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bkv, d), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, d), q.dtype),
+        scratch_shapes=_scratch(bq, d),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _scratch(bq, d):
+    from jax.experimental.pallas import tpu as pltpu
+    return [
+        pltpu.VMEM((bq, 128), jnp.float32),   # running max (col 0)
+        pltpu.VMEM((bq, 128), jnp.float32),   # running denom (col 0)
+        pltpu.VMEM((bq, d), jnp.float32),     # output accumulator
+    ]

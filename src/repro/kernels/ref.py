@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+used by the shape/dtype sweep tests)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_reference(q, k, v, *, causal=True, window=0, q_offset=0):
+    """q: (B,H,Sq,d); k,v: (B,KV,Skv,d) -> (B,H,Sq,d). Exact softmax."""
+    B, H, Sq, d = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    G = H // KV
+    k = jnp.repeat(k, G, axis=1)
+    v = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    q_pos = q_offset + jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def ssd_reference(x, dt, A, Bm, Cm):
+    """Sequential SSD recurrence (the literal state-space form).
+
+    x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm, Cm: (B,S,N).
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                       # (B,H,P),(B,H),(B,N),(B,N)
+        decay = jnp.exp(dtt * A)                    # (B,H)
+        h = h * decay[..., None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xt * dtt[..., None], bt)
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = (x.astype(jnp.float32).transpose(1, 0, 2, 3),
+          dt.astype(jnp.float32).transpose(1, 0, 2),
+          Bm.astype(jnp.float32).transpose(1, 0, 2),
+          Cm.astype(jnp.float32).transpose(1, 0, 2))
+    hN, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), hN.astype(x.dtype)
+
+
+def rglru_reference(a, b, h0=None):
+    """Sequential linear recurrence h_t = a_t h_{t-1} + b_t.
+
+    a, b: (B,S,W) float32; h0: (B,W) or None.
+    """
+    B, S, W = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, W), jnp.float32)
+
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32),
+                         (a.astype(jnp.float32).transpose(1, 0, 2),
+                          b.astype(jnp.float32).transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)

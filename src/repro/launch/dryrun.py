@@ -1,0 +1,204 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax-touching import: jax locks the
+# device count on first backend initialisation. Only the dry-run uses 512
+# placeholder host devices; smoke tests and benchmarks see the real 1.
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) combo.
+
+For each combo this proves the distribution config is coherent — sharding
+resolves, collectives lower, and the compiled module reports memory and cost
+analysis — without any real hardware. Results are cached as JSON under
+``results/dryrun/`` (one file per combo, resumable).
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k --mesh pod1
+    python -m repro.launch.dryrun --all [--mesh pod1|pod2|both]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_ARCHS, INPUT_SHAPES, get_config
+from repro.configs.base import OptimizerConfig
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import arch_for_shape, input_specs, shape_supported
+from repro.launch.train import make_train_step
+from repro.models.model import build_model
+from repro.roofline.analysis import model_flops_for
+from repro.sharding.partitioning import use_compute_mesh
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _mesh(kind: str):
+    return make_production_mesh(multi_pod=(kind == "pod2"))
+
+
+def run_combo(arch: str, shape_name: str, mesh_kind: str,
+              out_dir: str = RESULTS_DIR, save_hlo: bool = False,
+              weight_stationary_decode: bool = False) -> dict:
+    shape = INPUT_SHAPES[shape_name]
+    cfg0 = get_config(arch)
+    ok, reason = shape_supported(cfg0, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "status": "skipped", "reason": reason}
+    if not ok:
+        return rec
+
+    cfg = arch_for_shape(cfg0, shape)
+    if os.environ.get("REPRO_CP_ATTN"):
+        import dataclasses
+        cfg = dataclasses.replace(cfg, context_parallel_attention=True)
+        rec["context_parallel_attention"] = True
+    if os.environ.get("REPRO_REMAT"):
+        import dataclasses
+        cfg = dataclasses.replace(cfg, remat=os.environ["REPRO_REMAT"])
+        rec["remat"] = cfg.remat
+    if os.environ.get("REPRO_EXPERT_PARALLEL"):
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, expert_parallel=os.environ["REPRO_EXPERT_PARALLEL"])
+        rec["expert_parallel"] = cfg.expert_parallel
+    model = build_model(cfg)
+    mesh = _mesh(mesh_kind)
+    rec["num_devices"] = mesh.size
+
+    specs = input_specs(cfg, shape, mesh, model,
+                        weight_stationary_decode=weight_stationary_decode)
+    rec["weight_stationary_decode"] = weight_stationary_decode
+    t0 = time.time()
+    with use_compute_mesh(mesh):
+        if shape.kind == "train":
+            step = make_train_step(model, OptimizerConfig())
+            fn = jax.jit(step, donate_argnums=(0, 1))
+            lowered = fn.lower(specs["params"], specs["opt_state"],
+                               specs["batch"], specs["step"])
+        elif shape.kind == "prefill":
+            fn = jax.jit(model.prefill)
+            lowered = fn.lower(specs["params"], specs["batch"])
+        else:
+            fn = jax.jit(model.decode_step, donate_argnums=(1,))
+            lowered = fn.lower(specs["params"], specs["cache"],
+                               specs["batch"]["tokens"],
+                               specs["batch"]["pos"])
+        rec["lower_s"] = time.time() - t0
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = time.time() - t1
+
+    # ---- memory analysis -------------------------------------------------
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            rec["memory"] = {
+                k: int(getattr(ma, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes",
+                          "alias_size_in_bytes")
+                if hasattr(ma, k)}
+    except Exception as e:            # noqa: BLE001
+        rec["memory_error"] = str(e)
+
+    # ---- cost analysis -----------------------------------------------------
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec["flops"] = float(ca.get("flops", 0.0))
+        rec["bytes_accessed"] = float(ca.get("bytes accessed", 0.0))
+        rec["transcendentals"] = float(ca.get("transcendentals", 0.0))
+    except Exception as e:            # noqa: BLE001
+        rec["cost_error"] = str(e)
+
+    # ---- FLOPs / bytes / collectives from the partitioned HLO --------------
+    # (cost_analysis does not multiply while-body costs by trip count, so the
+    # roofline uses our own HLO walk; both are recorded.)
+    try:
+        from repro.roofline.hlo import analyze_hlo
+        hlo = compiled.as_text()
+        ana = analyze_hlo(hlo)
+        rec["hlo_flops"] = ana["flops"]
+        rec["hlo_bytes_accessed"] = ana["bytes"]
+        rec["collectives"] = ana["collectives"]
+        rec["hlo_text_bytes"] = len(hlo)
+        if save_hlo:
+            os.makedirs(out_dir, exist_ok=True)
+            with open(os.path.join(
+                    out_dir, f"{arch}_{shape_name}_{mesh_kind}.hlo"),
+                    "w") as f:
+                f.write(hlo)
+    except Exception as e:            # noqa: BLE001
+        rec["hlo_error"] = str(e)
+
+    rec["model_flops"] = model_flops_for(cfg, shape)
+    rec["param_count"] = cfg.param_count()
+    rec["active_param_count"] = cfg.active_param_count()
+    rec["status"] = "ok"
+    return rec
+
+
+def _result_path(out_dir, arch, shape, mesh_kind):
+    return os.path.join(out_dir, f"{arch}_{shape}_{mesh_kind}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--ws-decode", action="store_true",
+                    help="§Perf: weight-stationary decode sharding")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = ["pod1", "pod2"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        combos = [(a, s, m) for a in ALL_ARCHS for s in INPUT_SHAPES
+                  for m in meshes]
+    else:
+        combos = [(args.arch, args.shape, m) for m in meshes]
+
+    failures = 0
+    for arch, shape, mesh_kind in combos:
+        path = _result_path(args.out, arch, shape, mesh_kind)
+        if os.path.exists(path) and not args.force:
+            print(f"[skip cached] {arch} x {shape} x {mesh_kind}")
+            continue
+        print(f"[run ] {arch} x {shape} x {mesh_kind} ...", flush=True)
+        t0 = time.time()
+        try:
+            rec = run_combo(arch, shape, mesh_kind, args.out, args.save_hlo,
+                            weight_stationary_decode=args.ws_decode)
+        except Exception:             # noqa: BLE001
+            rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                   "status": "error", "traceback": traceback.format_exc()}
+            failures += 1
+        rec["wall_s"] = time.time() - t0
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        msg = rec["status"]
+        if rec["status"] == "ok":
+            msg += (f" lower={rec['lower_s']:.1f}s "
+                    f"compile={rec['compile_s']:.1f}s "
+                    f"flops={rec.get('flops', 0):.3g} "
+                    f"coll={rec.get('collectives', {}).get('total_bytes', 0):.3g}B")
+        elif rec["status"] == "error":
+            msg += "\n" + rec["traceback"].splitlines()[-1]
+        print(f"[done] {arch} x {shape} x {mesh_kind}: {msg}", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

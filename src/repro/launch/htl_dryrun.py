@@ -1,0 +1,163 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Must precede any jax-touching import (see dryrun.py).
+
+"""§Perf pair 3 — the paper's technique at datacenter scale.
+
+Lowers one HTL round (local phase + hypothesis transfer) of the trainer on
+the 2-pod production mesh, with the stacked Data-Collector dim sharded over
+the 'pod' axis, and measures pod-crossing (DCN) collective bytes against the
+synchronous data-parallel baseline. This is the paper's Table-3 experiment
+with radios replaced by the ICI/DCN hierarchy.
+
+    python -m repro.launch.htl_dryrun [--mode star|a2a|sync] [--local-steps N]
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import HTLConfig, OptimizerConfig
+from repro.core.htl_trainer import HTLTrainer
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import param_specs
+from repro.launch.train import make_train_step
+from repro.models.model import build_model
+from repro.optim.adamw import AdamWState
+from repro.roofline.hlo import analyze_hlo
+from repro.sharding.partitioning import use_compute_mesh
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "results", "perf")
+
+
+def _stacked_specs(ps, L, mesh):
+    def stack(s):
+        spec = s.sharding.spec
+        return jax.ShapeDtypeStruct(
+            (L,) + s.shape, s.dtype,
+            sharding=NamedSharding(mesh, P("pod", *spec)))
+    return jax.tree.map(stack, ps)
+
+
+def run(mode: str, local_steps: int, arch: str = "llama3.2-3b",
+        seq: int = 4096, global_batch: int = 256):
+    mesh = make_production_mesh(multi_pod=True)
+    L = mesh.shape["pod"]
+    cfg = get_config(arch)
+    if os.environ.get("REPRO_ONEHOT_EMBED"):
+        cfg = dataclasses.replace(cfg, embedding_impl="one_hot")
+    model = build_model(cfg)
+    opt_cfg = OptimizerConfig()
+    out = {"mode": mode, "arch": arch, "local_steps": local_steps,
+           "num_collectors": L}
+
+    with use_compute_mesh(mesh):
+        if mode == "sync":
+            from repro.configs.base import INPUT_SHAPES
+            from repro.launch.specs import input_specs
+            shape = INPUT_SHAPES["train_4k"]
+            specs = input_specs(cfg, shape, mesh, model)
+            step = make_train_step(model, opt_cfg)
+            t0 = time.time()
+            compiled = jax.jit(step, donate_argnums=(0, 1)).lower(
+                specs["params"], specs["opt_state"], specs["batch"],
+                specs["step"]).compile()
+            out["compile_s"] = time.time() - t0
+            ana = analyze_hlo(compiled.as_text())
+            # per-step DCN traffic x local_steps for an apples comparison
+            out["dcn_bytes_per_round"] = ana["collectives"]["dcn_bytes"] * \
+                local_steps
+            out["total_bytes_per_round"] = (
+                ana["collectives"]["total_bytes"] * local_steps)
+            return out
+
+        htl = HTLConfig(mode=mode, num_collectors=L,
+                        local_steps=local_steps, mixing_steps=2,
+                        mixing_mode=os.environ.get("REPRO_MIXING", "gd"))
+        tr = HTLTrainer(model, opt_cfg, htl)
+
+        ps = param_specs(model, mesh)
+        stacked = _stacked_specs(ps, L, mesh)
+        opt = AdamWState(
+            count=jax.ShapeDtypeStruct((), jnp.int32),
+            mu=jax.tree.map(lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.float32, sharding=s.sharding), stacked),
+            nu=jax.tree.map(lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.float32, sharding=s.sharding), stacked))
+        b_per = global_batch // L
+        tok = jax.ShapeDtypeStruct(
+            (local_steps, L, b_per, seq), jnp.int32,
+            sharding=NamedSharding(mesh, P(None, "pod", "data")))
+        batches = {"tokens": tok, "targets": tok}
+        mix_seq = int(os.environ.get("REPRO_MIX_SEQ", seq))
+        mix = {k: jax.ShapeDtypeStruct(
+            (L, b_per, mix_seq), jnp.int32,
+            sharding=NamedSharding(mesh, P("pod", "data"))) for k in
+            ("tokens", "targets")}
+        out["mix_seq"] = mix_seq
+
+        from repro.core.htl_trainer import HTLState
+        state = HTLState(stacked, opt, jax.ShapeDtypeStruct((), jnp.int32))
+
+        t0 = time.time()
+        if os.environ.get("REPRO_PODWISE"):
+            local_fn = lambda st, b: tr.local_phase_podwise(st, b, mesh)
+            out["podwise"] = True
+        else:
+            local_fn = tr.local_phase
+        local_c = jax.jit(local_fn, donate_argnums=(0,)).lower(
+            state, batches).compile()
+        out["compile_local_s"] = time.time() - t0
+        t0 = time.time()
+        transfer_c = jax.jit(tr.transfer_phase, donate_argnums=(0,)).lower(
+            state, mix).compile()
+        out["compile_transfer_s"] = time.time() - t0
+
+        a_local = analyze_hlo(local_c.as_text())
+        a_transfer = analyze_hlo(transfer_c.as_text())
+        out["dcn_bytes_per_round"] = (a_local["collectives"]["dcn_bytes"]
+                                      + a_transfer["collectives"]["dcn_bytes"])
+        out["dcn_local"] = a_local["collectives"]["dcn_bytes"]
+        out["dcn_transfer"] = a_transfer["collectives"]["dcn_bytes"]
+        out["total_bytes_per_round"] = (
+            a_local["collectives"]["total_bytes"]
+            + a_transfer["collectives"]["total_bytes"])
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="all",
+                    choices=["sync", "star", "a2a", "all"])
+    ap.add_argument("--local-steps", type=int, default=4)
+    ap.add_argument("--arch", default="llama3.2-3b")
+    args = ap.parse_args()
+    modes = ["sync", "star", "a2a"] if args.mode == "all" else [args.mode]
+    os.makedirs(RESULTS, exist_ok=True)
+    results = {}
+    for m in modes:
+        r = run(m, args.local_steps, args.arch)
+        results[m] = r
+        print(f"{m:5s}: DCN/round {r['dcn_bytes_per_round']:.4g} B "
+              f"(total {r['total_bytes_per_round']:.4g} B)", flush=True)
+    if "sync" in results:
+        for m in ("star", "a2a"):
+            if m in results:
+                ratio = results[m]["dcn_bytes_per_round"] / max(
+                    1.0, results["sync"]["dcn_bytes_per_round"])
+                print(f"{m} DCN ratio vs sync (H={args.local_steps}): "
+                      f"{ratio:.4f}")
+                results[m]["dcn_ratio_vs_sync"] = ratio
+    with open(os.path.join(RESULTS, f"htl_round_{args.arch}.json"),
+              "w") as f:
+        json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Serving launcher: lower/compile (and on CPU, run reduced) the serve path.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-72b --shape decode_32k
+        lowers decode_step under the production mesh (same as dryrun decode)
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --run
+        runs a reduced-config batched generation locally
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="decode_32k",
+                    choices=["decode_32k", "long_500k", "prefill_32k"])
+    ap.add_argument("--run", action="store_true",
+                    help="run a reduced local generation instead of lowering")
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2"])
+    args = ap.parse_args()
+
+    if args.run:
+        import jax
+
+        from repro.configs import get_config
+        from repro.data.pipeline import make_lm_batch
+        from repro.models import build_model
+        from repro.serving import ServeEngine
+        cfg = get_config(args.arch).reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = make_lm_batch(
+            cfg.vocab_size, 2, 32, d_model=cfg.d_model,
+            frontend_tokens=(cfg.frontend.num_tokens
+                             if cfg.family == "vlm" else 0),
+            encoder_len=(cfg.encoder_seq_len if cfg.family == "audio"
+                         else 0))
+        out = ServeEngine(model, params, max_new_tokens=8).generate(batch)
+        print("generated:", out.tolist())
+        return
+
+    # AOT path: reuse the dry-run machinery (sets 512 host devices itself,
+    # so run it as a module subprocess for device-count hygiene)
+    import subprocess
+    import sys
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", args.arch,
+           "--shape", args.shape, "--mesh", args.mesh, "--ws-decode",
+           "--force"]
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

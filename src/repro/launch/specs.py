@@ -1,0 +1,218 @@
+"""ShapeDtypeStruct input specs for every (architecture x input-shape) combo.
+
+``input_specs`` returns sharding-annotated ShapeDtypeStructs — weak-type
+correct, shardable, zero allocation — for the function the shape's kind
+lowers:
+
+* train_4k     -> ``train_step(params, opt_state, batch, step)``
+* prefill_32k  -> ``prefill(params, batch)``
+* decode_32k / long_500k -> ``decode_step(params, cache, tokens, pos)``
+
+VLM note: seq_len is the *total* context; the anyres image prefix (2880
+frontend tokens) is carved out of it. Whisper note: seq_len is the decoder
+length; the encoder is fixed at 1500 stub-frontend frames.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.model import Model
+from repro.sharding.partitioning import (DEFAULT_RULES, MULTIPOD_RULES,
+                                         ParamSpec, logical_to_pspec,
+                                         param_pspecs)
+
+LLAMA_LONG_WINDOW = 8192   # documented sliding-window variant for long_500k
+
+
+def rules_for(mesh: Mesh) -> dict:
+    return MULTIPOD_RULES if "pod" in mesh.shape else DEFAULT_RULES
+
+
+def param_rules_for(mesh: Mesh, shape: Optional[InputShape] = None,
+                    cfg: Optional[ModelConfig] = None,
+                    weight_stationary_decode: bool = True) -> dict:
+    """Weight sharding rules, specialised per workload.
+
+    §Perf optimization (beyond-paper): for decode steps the FSDP 'embed'->
+    data rule is catastrophic — every decoded token all-gathers the full
+    weights (the paper's "ship raw data over the expensive link" failure
+    mode). Decode instead keeps weights stationary: TP over 'model' only,
+    with MoE experts additionally sharded over 'data' (256-way expert
+    parallelism for deepseek-v3, which cannot fit TP-16 alone).
+    """
+    rules = dict(rules_for(mesh))
+    if (weight_stationary_decode and shape is not None
+            and shape.kind == "decode"):
+        rules["embed"] = None
+        rules["experts"] = rules["experts_both"]
+    return rules
+
+
+def arch_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Apply documented per-shape variants: llama sliding-window long ctx;
+    MoE decode uses expert parallelism over both mesh axes (§Perf)."""
+    if shape.name == "long_500k" and cfg.name == "llama3.2-3b":
+        cfg = dataclasses.replace(cfg, sliding_window=LLAMA_LONG_WINDOW)
+    if shape.kind == "decode" and cfg.moe is not None:
+        cfg = dataclasses.replace(cfg, expert_parallel="both")
+    return cfg
+
+
+def shape_supported(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    """Whether (arch, shape) is in scope; reason when skipped (DESIGN.md §5)."""
+    if shape.name == "long_500k":
+        cfg = arch_for_shape(cfg, shape)
+        if not (cfg.supports_long_context or cfg.sliding_window):
+            return False, ("full attention is quadratic at 524k ctx; no "
+                           "sub-quadratic variant implemented for this arch")
+    return True, ""
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh) -> dict:
+    rules = rules_for(mesh)
+    B = shape.global_batch
+    dt = jnp.dtype(cfg.dtype)
+
+    def spec(dims, axes):
+        return logical_to_pspec(axes, dims, mesh, rules)
+
+    if shape.kind in ("train",):
+        S = shape.seq_len
+        n_front = cfg.frontend.num_tokens if cfg.family == "vlm" else 0
+        S_text = S - n_front
+        out = {
+            "tokens": _sds((B, S_text), jnp.int32, mesh,
+                           spec((B, S_text), ("batch", "seq"))),
+            "targets": _sds((B, S_text), jnp.int32, mesh,
+                            spec((B, S_text), ("batch", "seq"))),
+        }
+        if cfg.family == "vlm":
+            out["frontend_embeds"] = _sds(
+                (B, n_front, cfg.d_model), dt, mesh,
+                spec((B, n_front, cfg.d_model), ("batch", "seq", None)))
+        if cfg.family == "audio":
+            out["encoder_embeds"] = _sds(
+                (B, cfg.encoder_seq_len, cfg.d_model), dt, mesh,
+                spec((B, cfg.encoder_seq_len, cfg.d_model),
+                     ("batch", "seq", None)))
+        return out
+
+    if shape.kind == "prefill":
+        S = shape.seq_len
+        n_front = cfg.frontend.num_tokens if cfg.family == "vlm" else 0
+        S_text = S - n_front
+        out = {"tokens": _sds((B, S_text), jnp.int32, mesh,
+                              spec((B, S_text), ("batch", "seq")))}
+        if cfg.family == "vlm":
+            out["frontend_embeds"] = _sds(
+                (B, n_front, cfg.d_model), dt, mesh,
+                spec((B, n_front, cfg.d_model), ("batch", "seq", None)))
+        if cfg.family == "audio":
+            out["encoder_embeds"] = _sds(
+                (B, cfg.encoder_seq_len, cfg.d_model), dt, mesh,
+                spec((B, cfg.encoder_seq_len, cfg.d_model),
+                     ("batch", "seq", None)))
+        return out
+
+    # decode kinds
+    return {"tokens": _sds((B, 1), jnp.int32, mesh,
+                           spec((B, 1), ("batch", None))),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def param_specs(model: Model, mesh: Mesh, rules: dict = None) -> dict:
+    rules = rules or rules_for(mesh)
+    t = model.template()
+    pspecs = param_pspecs(t, mesh, rules)
+    dt = jnp.dtype(model.cfg.dtype)
+    return jax.tree.map(
+        lambda s, p: _sds(s.shape, jnp.dtype(s.dtype or dt), mesh, p),
+        t, pspecs, is_leaf=lambda x: isinstance(x, (ParamSpec, P)))
+
+
+def _densify_spec(spec: P, shape, mesh: Mesh) -> P:
+    """ZeRO-1: extend a spec by sharding replicated dims over unused mesh
+    axes (largest dims first). Optimizer moments never need to be gathered
+    whole — only updated element-wise and reduce-scattered — so sharding
+    them maximally is free parallelism and a large memory win."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for e in entries:
+        for a in (e if isinstance(e, tuple) else (e,) if e else ()):
+            used.add(a)
+    free = [a for a in mesh.shape if a not in used]
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if entries[i] is not None or not free:
+            continue
+        for a in list(free):
+            if shape[i] % mesh.shape[a] == 0:
+                entries[i] = a
+                free.remove(a)
+                break
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def opt_state_specs(param_sds, mesh: Mesh, zero1: bool = False):
+    """AdamW moments (float32). With ``zero1`` the moments shard over every
+    mesh axis their dims allow — 2.6x memory win, but REFUTED as a pure
+    GSPMD transformation: the partitioner reshards grads/updates through
+    the mismatched layouts instead of the reduce-scatter + all-gather
+    schedule (llama train: collectives 33 GB -> 1.5 TB/device). Off by
+    default; the fix is a shard_map-manual optimizer step (§Perf log)."""
+    from repro.optim.adamw import AdamWState
+
+    def mom(s):
+        sharding = s.sharding
+        if zero1:
+            sharding = NamedSharding(
+                sharding.mesh,
+                _densify_spec(sharding.spec, s.shape, sharding.mesh))
+        return jax.ShapeDtypeStruct(s.shape, jnp.float32, sharding=sharding)
+
+    m = jax.tree.map(mom, param_sds)
+    return AdamWState(count=jax.ShapeDtypeStruct((), jnp.int32), mu=m,
+                      nu=jax.tree.map(lambda x: x, m))
+
+
+def cache_specs(model: Model, shape: InputShape, mesh: Mesh) -> dict:
+    rules = rules_for(mesh)
+    cfg = model.cfg
+    t = model.cache_template(shape.global_batch, shape.seq_len)
+    pspecs = param_pspecs(t, mesh, rules)
+    dt = jnp.dtype(cfg.dtype)
+    return jax.tree.map(
+        lambda s, p: _sds(s.shape, jnp.dtype(s.dtype or dt), mesh, p),
+        t, pspecs, is_leaf=lambda x: isinstance(x, (ParamSpec, P)))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                model: Optional[Model] = None,
+                weight_stationary_decode: bool = True) -> dict:
+    """All ShapeDtypeStructs needed to lower the step for this combo."""
+    from repro.models.model import build_model
+    cfg = arch_for_shape(cfg, shape)
+    model = model or build_model(cfg)
+    ps = param_specs(model, mesh,
+                     param_rules_for(mesh, shape, cfg,
+                                     weight_stationary_decode))
+    out = {"params": ps, "batch": batch_specs(cfg, shape, mesh)}
+    if shape.kind == "train":
+        out["opt_state"] = opt_state_specs(ps, mesh)
+        out["step"] = jax.ShapeDtypeStruct((), jnp.int32)
+    if shape.kind == "decode":
+        out["cache"] = cache_specs(model, shape, mesh)
+    return out

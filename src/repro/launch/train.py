@@ -1,0 +1,112 @@
+"""Training step factory + CPU-scale training driver.
+
+``make_train_step`` builds the jit-able update used both by the multi-pod
+dry-run (AOT lower+compile) and the runnable examples. The HTL trainer
+(`repro.core.htl_trainer`) wraps the same step with hypothesis-transfer
+rounds.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig, get_config
+from repro.data.pipeline import TokenStream
+from repro.models.model import Model, build_model
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.schedule import cosine_warmup_schedule
+
+
+def make_train_step(model: Model, opt_cfg: OptimizerConfig):
+    sched = cosine_warmup_schedule(opt_cfg)
+
+    def train_step(params, opt_state, batch, step):
+        (_, metrics), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(params, batch)
+        lr = sched(step)
+        params, opt_state, gnorm = adamw_update(grads, opt_state, params, lr,
+                                                opt_cfg)
+        metrics = dict(metrics)
+        metrics["gnorm"] = gnorm
+        metrics["lr"] = lr
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train_loop(arch: str, *, steps: int = 100, batch: int = 8,
+               seq_len: int = 256, reduced: bool = True, seed: int = 0,
+               log_every: int = 10, opt_cfg: OptimizerConfig = None,
+               ckpt_dir: str = None, ckpt_every: int = 0):
+    """Runnable single-host training loop (examples / integration tests).
+
+    With ``ckpt_dir`` set, saves params+opt periodically and resumes from the
+    latest checkpoint on restart.
+    """
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    opt_cfg = opt_cfg or OptimizerConfig(lr=1e-3, warmup_steps=20,
+                                         total_steps=steps)
+    params = model.init(jax.random.PRNGKey(seed))
+    opt_state = adamw_init(params)
+    start = 0
+    if ckpt_dir:
+        from repro.checkpoint import load_checkpoint
+        from repro.checkpoint.checkpointer import checkpoint_step
+        prev = checkpoint_step(ckpt_dir)
+        if prev is not None:
+            state = load_checkpoint(ckpt_dir,
+                                    {"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            start = prev
+            print(f"resumed from step {start}")
+    step_fn = jax.jit(make_train_step(model, opt_cfg), donate_argnums=(0, 1))
+
+    stream = TokenStream(cfg.vocab_size, seed=seed + start)
+    it = stream.batches(batch, seq_len)
+    history = []
+    t0 = time.time()
+    for i in range(start, steps):
+        b = next(it)
+        if cfg.family == "vlm":
+            b["frontend_embeds"] = jnp.zeros(
+                (batch, cfg.frontend.num_tokens, cfg.d_model), jnp.float32)
+        if cfg.family == "audio":
+            b["encoder_embeds"] = jnp.zeros(
+                (batch, cfg.encoder_seq_len, cfg.d_model), jnp.float32)
+        params, opt_state, m = step_fn(params, opt_state, b,
+                                       jnp.asarray(i, jnp.int32))
+        if (i + 1) % log_every == 0 or i == start:
+            loss = float(m["loss"])
+            history.append(loss)
+            print(f"step {i + 1:5d} loss {loss:.4f} "
+                  f"({(time.time() - t0) / (i - start + 1) * 1e3:.0f} "
+                  f"ms/step)")
+        if ckpt_dir and ckpt_every and (i + 1) % ckpt_every == 0:
+            from repro.checkpoint import save_checkpoint
+            save_checkpoint(ckpt_dir, {"params": params, "opt": opt_state},
+                            step=i + 1)
+    return params, history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (non-reduced) config")
+    args = ap.parse_args()
+    train_loop(args.arch, steps=args.steps, batch=args.batch,
+               seq_len=args.seq_len, reduced=not args.full)
+
+
+if __name__ == "__main__":
+    main()

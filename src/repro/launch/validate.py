@@ -1,0 +1,110 @@
+"""Static config validation: for every (arch x shape x mesh), report which
+logical axes actually shard and which silently replicate (divisibility), the
+estimated per-device parameter/optimizer/cache memory, and whether it fits
+the 16 GB v5e HBM. Pure metadata — no device allocation, no compile.
+
+    PYTHONPATH=src python -m repro.launch.validate [--arch ...]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ALL_ARCHS, INPUT_SHAPES, get_config
+from repro.launch.specs import arch_for_shape, param_rules_for, shape_supported
+from repro.models.model import build_model
+from repro.sharding.partitioning import ParamSpec, logical_to_pspec
+
+HBM_BYTES = 16 * 2**30
+
+
+class _MeshMeta:
+    """Just the axis sizes (logical_to_pspec only needs .shape)."""
+
+    def __init__(self, multi_pod=False):
+        self.shape = ({"pod": 2, "data": 16, "model": 16} if multi_pod
+                      else {"data": 16, "model": 16})
+
+
+def _tree_device_bytes(template, rules, mesh, default_itemsize=2) -> float:
+    """Per-device bytes after sharding (replicated dims count fully)."""
+    import jax
+    leaves = jax.tree.leaves(template,
+                             is_leaf=lambda x: isinstance(x, ParamSpec))
+    total = 0.0
+    n_repl_leaves = 0
+    for s in leaves:
+        spec = logical_to_pspec(s.axes, s.shape, mesh, rules)
+        shards = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            for a in (entry if isinstance(entry, tuple) else (entry,)):
+                shards *= mesh.shape[a]
+        itemsize = jnp.dtype(s.dtype).itemsize if s.dtype else default_itemsize
+        total += int(np.prod(s.shape)) * itemsize / shards
+        if shards == 1:
+            n_repl_leaves += 1
+    return total, n_repl_leaves, len(leaves)
+
+
+def validate(arch: str, shape_name: str, multi_pod=False) -> dict:
+    shape = INPUT_SHAPES[shape_name]
+    cfg0 = get_config(arch)
+    ok, reason = shape_supported(cfg0, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skip",
+                "reason": reason}
+    cfg = arch_for_shape(cfg0, shape)
+    model = build_model(cfg)
+    mesh = _MeshMeta(multi_pod)
+    rules = param_rules_for(mesh, shape, cfg)
+
+    p_bytes, p_repl, p_n = _tree_device_bytes(model.template(), rules, mesh)
+    out = {"arch": arch, "shape": shape_name, "status": "ok",
+           "params_gib": p_bytes / 2**30,
+           "replicated_weight_leaves": f"{p_repl}/{p_n}"}
+    total = p_bytes
+    if shape.kind == "train":
+        total += p_bytes + 2 * p_bytes * 2      # grads bf16 + adam f32 m,v
+        out["train_state_gib"] = total / 2**30
+    if shape.kind == "decode":
+        c_bytes, _, _ = _tree_device_bytes(
+            model.cache_template(shape.global_batch, shape.seq_len), rules,
+            mesh)
+        out["cache_gib"] = c_bytes / 2**30
+        total += c_bytes
+    out["fits_16gb"] = bool(total <= HBM_BYTES)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else ALL_ARCHS
+    n_bad = 0
+    for a in archs:
+        for s in INPUT_SHAPES:
+            r = validate(a, s, args.multi_pod)
+            if r["status"] == "skip":
+                continue
+            flag = "" if r["fits_16gb"] else "  ** EXCEEDS 16GB HBM **"
+            if not r["fits_16gb"]:
+                n_bad += 1
+            extra = ""
+            if "train_state_gib" in r:
+                extra = f" train-state {r['train_state_gib']:.1f} GiB"
+            if "cache_gib" in r:
+                extra = f" cache {r['cache_gib']:.1f} GiB"
+            print(f"{a:24s} {s:11s} params/dev {r['params_gib']:7.2f} GiB"
+                  f"{extra} repl {r['replicated_weight_leaves']}{flag}")
+    print(f"\n{n_bad} combos exceed single-chip HBM "
+          f"(expected for 671B training on one pod)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,723 @@
+"""Model assembly for all assigned architectures.
+
+One :class:`Model` wraps a :class:`ModelConfig` and exposes:
+
+* ``template()``        — ParamSpec tree (init / shardings / dry-run structs)
+* ``init(key, dtype)``  — materialized parameters
+* ``loss_fn``           — training loss (CE + MoE aux + MTP)
+* ``prefill``           — full-context forward returning (last_logits, cache)
+* ``decode_step``       — one-token serve step against a fixed-size cache
+* ``cache_template``    — ParamSpec tree for the serve cache
+
+Layers are stacked and evaluated with ``lax.scan`` (keeps HLO size O(1) in
+depth — an 80-layer model compiles like a 1-layer model), with configurable
+activation rematerialisation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks, rglru, ssd
+from repro.models.blocks import (
+    chunked_attention, cross_attention, gqa_attention, gqa_decode,
+    gqa_template, mla_attention, mla_decode, mla_template, mlp, mlp_template,
+    moe_ffn, moe_template, rmsnorm,
+)
+from repro.sharding.partitioning import ParamSpec, hint, init_params
+
+MTP_LOSS_COEF = 0.1
+
+
+def _stack(t, n: int):
+    """Add a leading stacked-layers dim to every ParamSpec in a template."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.init,
+                            s.dtype),
+        t, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _norm_spec(d):
+    return ParamSpec((d,), (None,), "ones")
+
+
+def _maybe_remat(f, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return f
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(f, policy=policy)
+    return jax.checkpoint(f)
+
+
+# ---------------------------------------------------------------------------
+# Per-family block templates
+# ---------------------------------------------------------------------------
+
+def _attn_block_template(cfg: ModelConfig, ffn: str = "mlp") -> dict:
+    d = cfg.d_model
+    t = {"ln1": _norm_spec(d), "ln2": _norm_spec(d)}
+    t["attn"] = mla_template(cfg) if cfg.mla is not None else gqa_template(cfg)
+    if ffn == "mlp":
+        t["mlp"] = mlp_template(d, cfg.d_ff)
+    elif ffn == "moe":
+        t["moe"] = moe_template(cfg)
+    elif ffn == "dense_first":
+        t["mlp"] = mlp_template(d, cfg.moe.dense_d_ff or cfg.d_ff)
+    return t
+
+
+def _encdec_dec_block_template(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "ln1": _norm_spec(d), "attn": gqa_template(cfg),
+        "lnx": _norm_spec(d), "xattn": gqa_template(cfg),
+        "ln2": _norm_spec(d), "mlp": mlp_template(d, cfg.d_ff),
+    }
+
+
+def _ssm_block_template(cfg: ModelConfig) -> dict:
+    return {"ln1": _norm_spec(cfg.d_model), "mixer": ssd.ssd_template(cfg)}
+
+
+def _hybrid_sublayer(cfg: ModelConfig, kind: str) -> dict:
+    d = cfg.d_model
+    mix = rglru.rglru_template(cfg) if kind == "rglru" else gqa_template(cfg)
+    return {"ln1": _norm_spec(d), "mix": mix,
+            "ln2": _norm_spec(d), "mlp": mlp_template(d, cfg.d_ff)}
+
+
+# ---------------------------------------------------------------------------
+# Block forward functions
+# ---------------------------------------------------------------------------
+
+def _attn_block(p, h, cfg: ModelConfig, *, window=None):
+    h = hint(h, ("batch", None, None))
+    x = rmsnorm(h, p["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        a, cache = mla_attention(p["attn"], x, cfg)
+    else:
+        a, cache = gqa_attention(p["attn"], x, cfg, window=window)
+    h = h + a
+    x2 = rmsnorm(h, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        if cfg.expert_parallel == "shard_map":
+            from repro.models.blocks import moe_ffn_shard_map
+            f, aux = moe_ffn_shard_map(p["moe"], x2, cfg)
+        else:
+            f, aux = moe_ffn(p["moe"], x2, cfg)
+    else:
+        f, aux = mlp(p["mlp"], x2), 0.0
+    return h + f, aux, cache
+
+
+def _attn_block_decode(p, h, cfg: ModelConfig, cache_slice, pos, *,
+                       window_cache=False):
+    h = hint(h, ("batch", None, None))
+    x = rmsnorm(h, p["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        # latent cache: (B, T, r+rope)
+        full = cache_slice["ckv"]
+        a, new_entry = _mla_decode_buffered(p["attn"], x, full, pos, cfg)
+        new_cache = {"ckv": _write_at(full, new_entry, pos)}
+    else:
+        ck, cv = cache_slice["k"], cache_slice["v"]
+        if window_cache:
+            a, (k_new, v_new) = _gqa_decode_window(p["attn"], x, ck, cv, cfg,
+                                                   pos)
+            new_cache = {"k": jnp.concatenate([ck[:, 1:], k_new], axis=1),
+                         "v": jnp.concatenate([cv[:, 1:], v_new], axis=1)}
+        else:
+            a, (k_new, v_new) = _gqa_decode_buffered(p["attn"], x, ck, cv,
+                                                     cfg, pos)
+            new_cache = {"k": _write_at(ck, k_new, pos),
+                         "v": _write_at(cv, v_new, pos)}
+    h = h + a
+    x2 = rmsnorm(h, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        f, aux = moe_ffn(p["moe"], x2, cfg)
+    else:
+        f, aux = mlp(p["mlp"], x2), 0.0
+    return h + f, aux, new_cache
+
+
+def _write_at(c, new, pos):
+    """Write a one-token entry into a (B,S,...) buffer at ``pos`` —
+    scalar (shared position) or (B,) per-sequence (continuous batching)."""
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        return lax.dynamic_update_slice_in_dim(c, new, pos, axis=1)
+    B = c.shape[0]
+    return c.at[jnp.arange(B), pos].set(new[:, 0])
+
+
+def _gqa_decode_buffered(p, x, ck, cv, cfg, pos):
+    """Decode against a fixed-size buffer: write at ``pos``, mask > pos."""
+    q, k_new, v_new = blocks.gqa_project_qkv(p, x, cfg)
+    posb = jnp.broadcast_to(jnp.asarray(pos).reshape(-1, 1) if
+                            jnp.asarray(pos).ndim else pos,
+                            (x.shape[0], 1))
+    q = blocks.apply_rope(q, posb, cfg.rope_theta)
+    k_new = blocks.apply_rope(k_new, posb, cfg.rope_theta)
+    k = _write_at(ck, k_new, pos)
+    v = _write_at(cv, v_new, pos)
+    out = chunked_attention(q, k, v, causal=True, window=cfg.sliding_window,
+                            q_offset=pos)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), (k_new, v_new)
+
+
+def _gqa_decode_window(p, x, ck, cv, cfg, pos):
+    """Decode against a rolling window cache (all entries valid)."""
+    q, k_new, v_new = blocks.gqa_project_qkv(p, x, cfg)
+    posa = jnp.asarray(pos)
+    posb = jnp.broadcast_to(posa.reshape(-1, 1) if posa.ndim else posa,
+                            (x.shape[0], 1))
+    q = blocks.apply_rope(q, posb, cfg.rope_theta)
+    k_new = blocks.apply_rope(k_new, posb, cfg.rope_theta)
+    k = jnp.concatenate([ck[:, 1:], k_new], axis=1)
+    v = jnp.concatenate([cv[:, 1:], v_new], axis=1)
+    out = chunked_attention(q, k, v, causal=False, window=0)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), (k_new, v_new)
+
+
+def _mla_decode_buffered(p, x, cache, pos, cfg):
+    """MLA absorbed decode against a fixed-size latent buffer."""
+    import math as _math
+    m = cfg.mla
+    B = x.shape[0]
+    posa = jnp.asarray(pos)
+    posb = jnp.broadcast_to(posa.reshape(-1, 1) if posa.ndim else posa,
+                            (B, 1))
+    q_nope, q_rope = blocks._mla_q(p, x, m, cfg, posb)
+    kv_a = x @ p["wkv_a"]
+    c_new = rmsnorm(kv_a[..., :m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    kr = blocks.apply_rope(kv_a[..., None, m.kv_lora_rank:], posb,
+                           cfg.rope_theta)
+    new_entry = jnp.concatenate([c_new, kr[:, :, 0, :]], axis=-1)  # (B,1,r+rope)
+    cache = _write_at(cache, new_entry, pos)
+    c = cache[..., :m.kv_lora_rank]
+    k_rope = cache[..., m.kv_lora_rank:]
+    wk = p["wkv_b"][..., :m.qk_nope_head_dim]
+    wv = p["wkv_b"][..., m.qk_nope_head_dim:]
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, wk)
+    scale = 1.0 / _math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    scores = (jnp.einsum("bshr,btr->bsht", q_lat, c,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshk,btk->bsht", q_rope, k_rope,
+                           preferred_element_type=jnp.float32)) * scale
+    t_idx = jnp.arange(cache.shape[1])
+    valid = t_idx[None, :] <= posb          # (B,T) — per-sequence positions
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bsht,btr->bshr", probs.astype(c.dtype), c)
+    o = jnp.einsum("bshr,rhk->bshk", o_lat, wv)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), new_entry
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------------ util
+    @property
+    def dtype(self):
+        return jnp.dtype(self.cfg.dtype)
+
+    def init(self, key, dtype=None):
+        return init_params(self.template(), key, dtype or self.dtype)
+
+    # ------------------------------------------------------------- templates
+    def template(self) -> dict:
+        cfg = self.cfg
+        d, v = cfg.d_model, cfg.vocab_size
+        t: Dict[str, Any] = {
+            "embed": ParamSpec((v, d), ("vocab", "embed"), "embed"),
+            "final_norm": _norm_spec(d),
+        }
+        if not cfg.tie_embeddings:
+            t["lm_head"] = ParamSpec((d, v), ("embed", "vocab"))
+
+        fam = cfg.family
+        if fam in ("dense", "vlm"):
+            t["layers"] = _stack(_attn_block_template(cfg), cfg.num_layers)
+        elif fam == "moe":
+            fk = cfg.moe.first_k_dense
+            if fk:
+                t["layers_dense"] = _stack(
+                    _attn_block_template(cfg, "dense_first"), fk)
+            t["layers"] = _stack(_attn_block_template(cfg, "moe"),
+                                 cfg.num_layers - fk)
+            if cfg.num_mtp_modules:
+                t["mtp"] = {
+                    "proj": ParamSpec((2 * d, d), ("embed", None)),
+                    "norm_h": _norm_spec(d), "norm_e": _norm_spec(d),
+                    "block": _attn_block_template(cfg, "moe"),
+                    "final_norm": _norm_spec(d),
+                }
+        elif fam == "ssm":
+            t["layers"] = _stack(_ssm_block_template(cfg), cfg.num_layers)
+        elif fam == "hybrid":
+            period = {
+                "rec1": _hybrid_sublayer(cfg, "rglru"),
+                "rec2": _hybrid_sublayer(cfg, "rglru"),
+                "att": _hybrid_sublayer(cfg, "attn"),
+            }
+            n_per, n_tail = self._hybrid_counts()
+            t["periods"] = _stack(period, n_per)
+            if n_tail:
+                t["tail"] = _stack(_hybrid_sublayer(cfg, "rglru"), n_tail)
+        elif fam == "audio":
+            t["enc_layers"] = _stack(_attn_block_template(cfg),
+                                     cfg.num_encoder_layers)
+            t["enc_norm"] = _norm_spec(d)
+            t["layers"] = _stack(_encdec_dec_block_template(cfg),
+                                 cfg.num_layers)
+        else:
+            raise ValueError(fam)
+        return t
+
+    def _hybrid_counts(self) -> Tuple[int, int]:
+        L = self.cfg.num_layers
+        period = len(self.cfg.rglru.pattern)
+        return L // period, L % period
+
+    # ------------------------------------------------------------- embedding
+    def _embed(self, params, tokens):
+        if self.cfg.embedding_impl == "one_hot":
+            oh = jax.nn.one_hot(tokens, self.cfg.vocab_size,
+                                dtype=self.dtype)
+            h = jnp.einsum("bsv,vd->bsd", oh, params["embed"])
+        else:
+            h = params["embed"][tokens].astype(self.dtype)
+        if self.cfg.family == "hybrid":           # gemma-style scaling
+            h = h * jnp.asarray(self.cfg.d_model ** 0.5, self.dtype)
+        # keep activations batch-sharded (not FSDP-sharded on d_model)
+        return hint(h, ("batch", None, None))
+
+    def _head(self, params, h):
+        if self.cfg.tie_embeddings:
+            return jnp.einsum("bsd,vd->bsv", h, params["embed"])
+        return jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+
+    # ---------------------------------------------------------- trunk passes
+    def _trunk(self, params, h, *, collect_cache=False, enc_out=None):
+        """Full-sequence pass over all layers. Returns (h, aux, caches)."""
+        cfg = self.cfg
+        fam = cfg.family
+
+        if fam in ("dense", "vlm", "moe"):
+            caches = {}
+            aux_total = 0.0
+            if fam == "moe" and cfg.moe.first_k_dense:
+                def body_d(carry, p_l):
+                    h, aux = carry
+                    h, a, cache = _attn_block(p_l, h, cfg)
+                    return (h, aux + a), cache if collect_cache else None
+                body_d = _maybe_remat(body_d, cfg) if cfg.remat != "none" else body_d
+                (h, aux_total), cache_d = lax.scan(
+                    body_d, (h, 0.0), params["layers_dense"])
+                if collect_cache:
+                    caches["dense"] = cache_d
+
+            def body(carry, p_l):
+                h, aux = carry
+                h, a, cache = _attn_block(p_l, h, cfg)
+                return (h, aux + a), cache if collect_cache else None
+            body = _maybe_remat(body, cfg) if cfg.remat != "none" else body
+            (h, aux_total), cache_m = lax.scan(body, (h, aux_total),
+                                               params["layers"])
+            if collect_cache:
+                caches["main"] = cache_m
+            return h, aux_total, caches
+
+        if fam == "ssm":
+            def body(h, p_l):
+                h = hint(h, ("batch", None, None))
+                x = rmsnorm(h, p_l["ln1"], cfg.norm_eps)
+                y, state = ssd.ssd_forward(p_l["mixer"], x, cfg)
+                return h + y, state if collect_cache else None
+            body = _maybe_remat(body, cfg) if cfg.remat != "none" else body
+            h, states = lax.scan(body, h, params["layers"])
+            return h, 0.0, {"main": states}
+
+        if fam == "hybrid":
+            win = cfg.rglru.window
+
+            def sub(p, h, kind):
+                h = hint(h, ("batch", None, None))
+                x = rmsnorm(h, p["ln1"], cfg.norm_eps)
+                if kind == "rglru":
+                    y, st = rglru.rglru_forward(p["mix"], x, cfg)
+                else:
+                    y, (k, v) = gqa_attention(p["mix"], x, cfg, window=win)
+                    w = min(win, k.shape[1])
+                    st = (k[:, -w:], v[:, -w:])
+                h = h + y
+                h = h + mlp(p["mlp"], rmsnorm(h, p["ln2"], cfg.norm_eps))
+                return h, st
+
+            def body(h, p_l):
+                h, st1 = sub(p_l["rec1"], h, "rglru")
+                h, st2 = sub(p_l["rec2"], h, "rglru")
+                h, st3 = sub(p_l["att"], h, "attn")
+                sts = (st1, st2, st3) if collect_cache else None
+                return h, sts
+            body = _maybe_remat(body, cfg) if cfg.remat != "none" else body
+            h, period_sts = lax.scan(body, h, params["periods"])
+            caches = {"periods": period_sts}
+            if "tail" in params:
+                def body_t(h, p_l):
+                    h, st = sub(p_l, h, "rglru")
+                    return h, st if collect_cache else None
+                h, tail_sts = lax.scan(body_t, h, params["tail"])
+                caches["tail"] = tail_sts
+            return h, 0.0, caches
+
+        if fam == "audio":
+            # decoder trunk with cross-attention to enc_out
+            def body(h, p_l):
+                h = hint(h, ("batch", None, None))
+                x = rmsnorm(h, p_l["ln1"], cfg.norm_eps)
+                a, (k, v) = gqa_attention(p_l["attn"], x, cfg)
+                h = h + a
+                xq = rmsnorm(h, p_l["lnx"], cfg.norm_eps)
+                ek = jnp.einsum("btd,dhk->bthk", enc_out, p_l["xattn"]["wk"])
+                ev = jnp.einsum("btd,dhk->bthk", enc_out, p_l["xattn"]["wv"])
+                if cfg.qkv_bias:
+                    ek = ek + p_l["xattn"]["bk"]
+                    ev = ev + p_l["xattn"]["bv"]
+                h = h + cross_attention(p_l["xattn"], xq, (ek, ev), cfg)
+                h = h + mlp(p_l["mlp"], rmsnorm(h, p_l["ln2"], cfg.norm_eps))
+                return h, ((k, v), (ek, ev)) if collect_cache else None
+            body = _maybe_remat(body, cfg) if cfg.remat != "none" else body
+            h, caches = lax.scan(body, h, params["layers"])
+            return h, 0.0, {"main": caches}
+
+        raise ValueError(fam)
+
+    def _encode(self, params, enc_embeds):
+        """Whisper encoder over precomputed (stub-frontend) frame embeddings."""
+        cfg = self.cfg
+        h = enc_embeds.astype(self.dtype)
+        # sinusoidal positions
+        S, d = h.shape[1], h.shape[2]
+        pos = jnp.arange(S)[:, None].astype(jnp.float32)
+        dim = jnp.arange(0, d, 2)[None, :].astype(jnp.float32)
+        angle = pos / jnp.power(10000.0, dim / d)
+        pe = jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+        h = h + pe[None].astype(self.dtype)
+
+        def body(h, p_l):
+            h = hint(h, ("batch", None, None))
+            x = rmsnorm(h, p_l["ln1"], cfg.norm_eps)
+            a, _ = gqa_attention(p_l["attn"], x, cfg, causal=False, rope=False)
+            h = h + a
+            h = h + mlp(p_l["mlp"], rmsnorm(h, p_l["ln2"], cfg.norm_eps))
+            return h, None
+        body = _maybe_remat(body, cfg) if cfg.remat != "none" else body
+        h, _ = lax.scan(body, h, params["enc_layers"])
+        return rmsnorm(h, params["enc_norm"], cfg.norm_eps)
+
+    # -------------------------------------------------------------- training
+    def loss_fn(self, params, batch):
+        cfg = self.cfg
+        tokens, targets = batch["tokens"], batch["targets"]
+        h = self._embed(params, tokens)
+        enc_out = None
+        n_front = 0
+        if cfg.family == "audio":
+            enc_out = self._encode(params, batch["encoder_embeds"])
+        elif cfg.family == "vlm":
+            fe = batch["frontend_embeds"].astype(self.dtype)
+            n_front = fe.shape[1]
+            h = jnp.concatenate([fe, h], axis=1)
+
+        h, aux, _ = self._trunk(params, h, enc_out=enc_out)
+        if n_front:
+            h = h[:, n_front:]
+        h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        logits = self._head(params, h)
+        loss = _ce(logits, targets)
+        metrics = {"ce": loss, "aux": jnp.asarray(aux, jnp.float32)}
+
+        if cfg.num_mtp_modules:
+            loss_mtp = self._mtp_loss(params, h, tokens, targets)
+            metrics["mtp"] = loss_mtp
+            loss = loss + MTP_LOSS_COEF * loss_mtp
+        total = loss + aux
+        metrics["loss"] = total
+        return total, metrics
+
+    def _mtp_loss(self, params, h, tokens, targets):
+        """DeepSeek-V3 multi-token prediction: predict t+2 from (h_t, emb_{t+1})."""
+        cfg = self.cfg
+        m = params["mtp"]
+        h_in = rmsnorm(h[:, :-1], m["norm_h"], cfg.norm_eps)
+        e_in = rmsnorm(self._embed(params, tokens[:, 1:]), m["norm_e"],
+                       cfg.norm_eps)
+        x = jnp.concatenate([h_in, e_in], axis=-1) @ m["proj"]
+        x2, _, _ = _attn_block(m["block"], x, cfg)
+        x2 = rmsnorm(x2, m["final_norm"], cfg.norm_eps)
+        logits = self._head(params, x2)
+        return _ce(logits, targets[:, 1:])
+
+    # --------------------------------------------------------------- serving
+    def prefill(self, params, batch):
+        """Returns (last_token_logits, cache)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        h = self._embed(params, tokens)
+        enc_out = None
+        n_front = 0
+        if cfg.family == "audio":
+            enc_out = self._encode(params, batch["encoder_embeds"])
+        elif cfg.family == "vlm":
+            fe = batch["frontend_embeds"].astype(self.dtype)
+            n_front = fe.shape[1]
+            h = jnp.concatenate([fe, h], axis=1)
+        h, _, caches = self._trunk(params, h, collect_cache=True,
+                                   enc_out=enc_out)
+        h = rmsnorm(h[:, -1:], params["final_norm"], cfg.norm_eps)
+        logits = self._head(params, h)[:, 0]
+        return logits, self._pack_cache(caches)
+
+    def _pack_cache(self, caches):
+        cfg = self.cfg
+        fam = cfg.family
+        if cfg.mla is not None:
+            parts = [caches["main"]]
+            if "dense" in caches:
+                parts.insert(0, caches["dense"])
+            return {"ckv": jnp.concatenate(parts, 0)}
+        if fam in ("dense", "vlm", "moe"):
+            k, v = caches["main"]
+            if cfg.sliding_window:
+                w = min(cfg.sliding_window, k.shape[2])
+                k, v = k[:, :, -w:], v[:, :, -w:]
+            return {"k": k, "v": v}
+        if fam == "ssm":
+            st, conv = caches["main"]
+            return {"state": st, "conv": conv}
+        if fam == "hybrid":
+            (h1, c1), (h2, c2), (ak, av) = caches["periods"]
+            out = {"rec1_h": h1, "rec1_conv": c1, "rec2_h": h2,
+                   "rec2_conv": c2, "att_k": ak, "att_v": av}
+            if "tail" in caches:
+                th, tc = caches["tail"]
+                out["tail_h"] = th
+                out["tail_conv"] = tc
+            return out
+        if fam == "audio":
+            (k, v), (ek, ev) = caches["main"]
+            return {"k": k, "v": v, "xk": ek, "xv": ev}
+        raise ValueError(fam)
+
+    def cache_template(self, batch: int, seq_len: int) -> dict:
+        cfg = self.cfg
+        fam = cfg.family
+        L, B, d = cfg.num_layers, batch, cfg.d_model
+        KV, hd = cfg.num_kv_heads, cfg.head_dim
+        dt = None  # default model dtype
+        S = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+
+        def kv(nl, s, kvh=KV, h=hd):
+            ax = ("layers", "batch", "cache_len", "kv_heads", None)
+            return (ParamSpec((nl, B, s, kvh, h), ax, "zeros", dt),
+                    ParamSpec((nl, B, s, kvh, h), ax, "zeros", dt))
+
+        if cfg.mla is not None:
+            m = cfg.mla
+            width = m.kv_lora_rank + m.qk_rope_head_dim
+            return {"ckv": ParamSpec((L, B, S, width),
+                                     ("layers", "batch", "cache_len", None),
+                                     "zeros", dt)}
+        if fam in ("dense", "vlm", "moe"):
+            k, v = kv(L, S)
+            return {"k": k, "v": v}
+        if fam == "ssm":
+            d_in, nh, P, N = ssd.ssd_dims(cfg)
+            ch = d_in + 2 * N
+            return {
+                "state": ParamSpec((L, B, nh, P, N),
+                                   ("layers", "batch", "heads", None, None),
+                                   "zeros", dt),
+                "conv": ParamSpec((L, B, cfg.ssm.conv_width - 1, ch),
+                                  ("layers", "batch", None, "mlp"),
+                                  "zeros", dt)}
+        if fam == "hybrid":
+            n_per, n_tail = self._hybrid_counts()
+            W = rglru.rglru_width(cfg)
+            cw = cfg.rglru.conv_width
+            win = min(cfg.rglru.window, seq_len)
+            ak, av = kv(n_per, win)
+            out = {
+                "rec1_h": ParamSpec((n_per, B, W), ("layers", "batch", "lru"),
+                                    "zeros", dt),
+                "rec1_conv": ParamSpec((n_per, B, cw - 1, W),
+                                       ("layers", "batch", None, "lru"),
+                                       "zeros", dt),
+                "rec2_h": ParamSpec((n_per, B, W), ("layers", "batch", "lru"),
+                                    "zeros", dt),
+                "rec2_conv": ParamSpec((n_per, B, cw - 1, W),
+                                       ("layers", "batch", None, "lru"),
+                                       "zeros", dt),
+                "att_k": ak, "att_v": av,
+            }
+            if n_tail:
+                out["tail_h"] = ParamSpec((n_tail, B, W),
+                                          ("layers", "batch", "lru"),
+                                          "zeros", dt)
+                out["tail_conv"] = ParamSpec((n_tail, B, cw - 1, W),
+                                             ("layers", "batch", None, "lru"),
+                                             "zeros", dt)
+            return out
+        if fam == "audio":
+            k, v = kv(L, S)
+            xk, xv = kv(L, cfg.encoder_seq_len)
+            return {"k": k, "v": v, "xk": xk, "xv": xv}
+        raise ValueError(fam)
+
+    def decode_step(self, params, cache, tokens, pos):
+        """One serve step: tokens (B,1) int32, pos scalar int32.
+
+        Returns (logits (B,V), new_cache). Attention caches are fixed-size
+        buffers written in place at ``pos`` (or rolled, for window caches).
+        """
+        cfg = self.cfg
+        fam = cfg.family
+        h = self._embed(params, tokens)
+        window_cache = bool(cfg.sliding_window)
+
+        if fam in ("dense", "vlm", "moe"):
+            aux_t = 0.0
+            new_caches = {}
+            if fam == "moe" and cfg.moe.first_k_dense and cfg.mla is not None:
+                fk = cfg.moe.first_k_dense
+                full = cache["ckv"]
+                c_dense, c_moe = full[:fk], full[fk:]
+
+                def body_d(carry, xs):
+                    h, aux = carry
+                    p_l, c_l = xs
+                    h, a, nc = _attn_block_decode(p_l, h, cfg, {"ckv": c_l},
+                                                  pos)
+                    return (h, aux + a), nc["ckv"]
+                (h, aux_t), nc_d = lax.scan(body_d, (h, aux_t),
+                                            (params["layers_dense"], c_dense))
+
+                def body_m(carry, xs):
+                    h, aux = carry
+                    p_l, c_l = xs
+                    h, a, nc = _attn_block_decode(p_l, h, cfg, {"ckv": c_l},
+                                                  pos)
+                    return (h, aux + a), nc["ckv"]
+                (h, aux_t), nc_m = lax.scan(body_m, (h, aux_t),
+                                            (params["layers"], c_moe))
+                new_caches = {"ckv": jnp.concatenate([nc_d, nc_m], 0)}
+            else:
+                cache_main = ({"ckv": cache["ckv"]} if cfg.mla is not None
+                              else {"k": cache["k"], "v": cache["v"]})
+
+                def body(carry, xs):
+                    h, aux = carry
+                    p_l, c_l = xs
+                    h, a, nc = _attn_block_decode(
+                        p_l, h, cfg, c_l, pos, window_cache=window_cache)
+                    return (h, aux + a), nc
+                (h, aux_t), new_caches = lax.scan(
+                    body, (h, 0.0), (params["layers"], cache_main))
+        elif fam == "ssm":
+            def body(h, xs):
+                p_l, st, cv = xs
+                x = rmsnorm(h, p_l["ln1"], cfg.norm_eps)
+                y, (nst, ncv) = ssd.ssd_decode(p_l["mixer"], x, st, cv, cfg)
+                return h + y, (nst, ncv)
+            h, (nst, ncv) = lax.scan(
+                body, h, (params["layers"], cache["state"], cache["conv"]))
+            new_caches = {"state": nst, "conv": ncv}
+        elif fam == "hybrid":
+            def sub_dec(p, h, kind, st):
+                x = rmsnorm(h, p["ln1"], cfg.norm_eps)
+                if kind == "rglru":
+                    hs, cv = st
+                    y, (nhs, ncv) = rglru.rglru_decode(p["mix"], x, hs, cv,
+                                                       cfg)
+                    nst = (nhs, ncv)
+                else:
+                    ck, cv_ = st
+                    y, (kn, vn) = _gqa_decode_window(p["mix"], x, ck, cv_,
+                                                     cfg, pos)
+                    nst = (jnp.concatenate([ck[:, 1:], kn], 1),
+                           jnp.concatenate([cv_[:, 1:], vn], 1))
+                h = h + y
+                h = h + mlp(p["mlp"], rmsnorm(h, p["ln2"], cfg.norm_eps))
+                return h, nst
+
+            def body(h, xs):
+                p_l, r1h, r1c, r2h, r2c, ak, av = xs
+                h, n1 = sub_dec(p_l["rec1"], h, "rglru", (r1h, r1c))
+                h, n2 = sub_dec(p_l["rec2"], h, "rglru", (r2h, r2c))
+                h, n3 = sub_dec(p_l["att"], h, "attn", (ak, av))
+                return h, (n1[0], n1[1], n2[0], n2[1], n3[0], n3[1])
+            h, outs = lax.scan(body, h, (params["periods"], cache["rec1_h"],
+                                         cache["rec1_conv"], cache["rec2_h"],
+                                         cache["rec2_conv"], cache["att_k"],
+                                         cache["att_v"]))
+            new_caches = {"rec1_h": outs[0], "rec1_conv": outs[1],
+                          "rec2_h": outs[2], "rec2_conv": outs[3],
+                          "att_k": outs[4], "att_v": outs[5]}
+            if "tail" in params:
+                def body_t(h, xs):
+                    p_l, th, tc = xs
+                    h, nst = sub_dec(p_l, h, "rglru", (th, tc))
+                    return h, nst
+                h, (nth, ntc) = lax.scan(body_t, h, (params["tail"],
+                                                     cache["tail_h"],
+                                                     cache["tail_conv"]))
+                new_caches["tail_h"] = nth
+                new_caches["tail_conv"] = ntc
+        elif fam == "audio":
+            def body(h, xs):
+                p_l, ck, cv, xk, xv = xs
+                x = rmsnorm(h, p_l["ln1"], cfg.norm_eps)
+                a, (kn, vn) = _gqa_decode_buffered(p_l["attn"], x, ck, cv,
+                                                   cfg, pos)
+                h = h + a
+                xq = rmsnorm(h, p_l["lnx"], cfg.norm_eps)
+                h = h + cross_attention(p_l["xattn"], xq, (xk, xv), cfg)
+                h = h + mlp(p_l["mlp"], rmsnorm(h, p_l["ln2"], cfg.norm_eps))
+                nk = _write_at(ck, kn, pos)
+                nv = _write_at(cv, vn, pos)
+                return h, (nk, nv)
+            h, (nk, nv) = lax.scan(body, h, (params["layers"], cache["k"],
+                                             cache["v"], cache["xk"],
+                                             cache["xv"]))
+            new_caches = {"k": nk, "v": nv, "xk": cache["xk"],
+                          "xv": cache["xv"]}
+        else:
+            raise ValueError(fam)
+
+        h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        logits = self._head(params, h)[:, 0]
+        return logits, new_caches
+
+
+def _ce(logits, targets):
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,116 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) [arXiv:2402.19427].
+
+Temporal mixing = gated linear recurrence:
+    i_t = sigmoid(W_i u_t)          (input gate, block-diagonal)
+    r_t = sigmoid(W_r u_t)          (recurrence gate, block-diagonal)
+    log a_t = -c * softplus(Lambda) * r_t
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Train/prefill evaluate the recurrence with `lax.associative_scan` (parallel
+prefix over time); decode is the O(1) step. The Pallas kernel
+(`repro.kernels.rglru_scan`) is the TPU fast path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.sharding.partitioning import ParamSpec
+
+C_FACTOR = 8.0
+N_GATE_BLOCKS = 16
+
+
+def rglru_width(cfg: ModelConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def rglru_template(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    W = rglru_width(cfg)
+    r = cfg.rglru
+    nb = N_GATE_BLOCKS
+    bs = W // nb
+    return {
+        "w_y": ParamSpec((D, W), ("embed", "lru")),
+        "w_x": ParamSpec((D, W), ("embed", "lru")),
+        "conv_w": ParamSpec((r.conv_width, W), ("conv", "lru"), "conv"),
+        "conv_b": ParamSpec((W,), ("lru",), "zeros"),
+        "gate_i": ParamSpec((nb, bs, bs), (None, None, None), "fan_in"),
+        "gate_r": ParamSpec((nb, bs, bs), (None, None, None), "fan_in"),
+        "lam": ParamSpec((W,), ("lru",), "dt_bias"),
+        "w_out": ParamSpec((W, D), ("lru", "embed"), "scaled_normal"),
+    }
+
+
+def _causal_conv(u, w, b):
+    cw = w.shape[0]
+    C = u.shape[-1]
+    out = lax.conv_general_dilated(
+        u, w[:, None, :], window_strides=(1,), padding=[(cw - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=C)
+    return out + b
+
+
+def _block_diag(u, w):
+    """u: (...,W), w: (nb,bs,bs) -> (...,W) block-diagonal matmul."""
+    nb, bs, _ = w.shape
+    ur = u.reshape(u.shape[:-1] + (nb, bs))
+    out = jnp.einsum("...nb,nbc->...nc", ur, w)
+    return out.reshape(u.shape)
+
+
+def _gates(u, p):
+    i = jax.nn.sigmoid(_block_diag(u, p["gate_i"]).astype(jnp.float32))
+    r = jax.nn.sigmoid(_block_diag(u, p["gate_r"]).astype(jnp.float32))
+    log_a = -C_FACTOR * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * \
+        u.astype(jnp.float32)
+    return a, gated_in
+
+
+def rglru_scan_ref(a, b):
+    """Linear recurrence h_t = a_t h_{t-1} + b_t over axis 1 (time).
+
+    a, b: (B,S,W) float32. Parallel prefix: (a2,b2)o(a1,b1)=(a1*a2, a2*b1+b2).
+    """
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    _, h = lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_forward(p, x, cfg: ModelConfig):
+    """x: (B,S,D) -> (y, (h_final, conv_tail))."""
+    B, S, D = x.shape
+    y_branch = jax.nn.gelu(x @ p["w_y"])
+    u = x @ p["w_x"]
+    u = _causal_conv(u, p["conv_w"], p["conv_b"])
+    a, gated_in = _gates(u, p)
+    if cfg.attention_impl == "pallas":
+        from repro.kernels.ops import rglru_scan as rglru_scan_kernel
+        h = rglru_scan_kernel(a, gated_in)
+    else:
+        h = rglru_scan_ref(a, gated_in)                 # (B,S,W) f32
+    h = h.astype(x.dtype)
+    out = (h * y_branch) @ p["w_out"]
+    conv_tail = (x @ p["w_x"])[:, S - (cfg.rglru.conv_width - 1):, :]
+    return out, (h[:, -1, :], conv_tail)
+
+
+def rglru_decode(p, x, h_state, conv_state, cfg: ModelConfig):
+    """One-token step. x: (B,1,D); h_state: (B,W); conv_state: (B,cw-1,W)."""
+    y_branch = jax.nn.gelu(x @ p["w_y"])                # (B,1,W)
+    u_new = x @ p["w_x"]                                # (B,1,W)
+    window = jnp.concatenate([conv_state, u_new], axis=1)
+    u = jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+    a, gated_in = _gates(u[:, None, :], p)              # (B,1,W)
+    h = a[:, 0] * h_state.astype(jnp.float32) + gated_in[:, 0]
+    h = h.astype(x.dtype)
+    out = (h[:, None, :] * y_branch) @ p["w_out"]
+    return out, (h, window[:, 1:, :])

@@ -1,0 +1,180 @@
+"""Mamba-2 SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Train/prefill use the chunked dual form: intra-chunk attention-like matmuls
+(MXU-friendly) + inter-chunk recurrent state carry via `lax.scan`. Decode is
+the O(1) recurrent step. The Pallas kernel (`repro.kernels.ssd_scan`) is the
+TPU fast path for the intra-chunk part; this module is the XLA reference used
+for lowering and as the kernel oracle's substrate.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.sharding.partitioning import ParamSpec
+
+
+def ssd_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = s.num_heads or d_inner // s.head_dim
+    return d_inner, nheads, s.head_dim, s.state_dim
+
+
+def ssd_template(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    s = cfg.ssm
+    d_in, nh, P, N = ssd_dims(cfg)
+    conv_ch = d_in + 2 * N
+    return {
+        "w_z": ParamSpec((D, d_in), ("embed", "mlp")),
+        "w_xbc": ParamSpec((D, conv_ch), ("embed", "mlp")),
+        "w_dt": ParamSpec((D, nh), ("embed", None)),
+        "dt_bias": ParamSpec((nh,), (None,), "dt_bias"),
+        "A_log": ParamSpec((nh,), (None,), "ssm_a"),
+        "D_skip": ParamSpec((nh,), (None,), "ones"),
+        "conv_w": ParamSpec((s.conv_width, conv_ch), ("conv", "mlp"), "conv"),
+        "conv_b": ParamSpec((conv_ch,), ("mlp",), "zeros"),
+        "gate_norm": ParamSpec((d_in,), ("mlp",), "ones"),
+        "w_out": ParamSpec((d_in, D), ("mlp", "embed"), "scaled_normal"),
+    }
+
+
+def _causal_conv(u, w, b):
+    """Depthwise causal conv. u: (B,S,C), w: (cw,C)."""
+    cw = w.shape[0]
+    B, S, C = u.shape
+    out = lax.conv_general_dilated(
+        u, w[:, None, :],
+        window_strides=(1,), padding=[(cw - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=C)
+    return out + b
+
+
+def _gated_rmsnorm(y, z, scale, eps):
+    y = y * jax.nn.silu(z)
+    y32 = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(y32), axis=-1, keepdims=True)
+    return (y32 * lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD scan.
+
+    x:  (B,S,H,P)   dt: (B,S,H) (post-softplus)   A: (H,) (negative)
+    Bm: (B,S,N)     Cm: (B,S,N)  (single group, shared across heads)
+    Returns y: (B,S,H,P), final_state: (B,H,P,N).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    if S % Q != 0:
+        Q = S
+    nc = S // Q
+    xr = x.reshape(Bsz, nc, Q, H, P)
+    dtr = dt.reshape(Bsz, nc, Q, H).astype(jnp.float32)
+    Br = Bm.reshape(Bsz, nc, Q, N)
+    Cr = Cm.reshape(Bsz, nc, Q, N)
+
+    da = dtr * A                                    # (B,nc,Q,H), negative
+    cs = jnp.cumsum(da, axis=2)                     # within-chunk cumsum
+    seg_last = cs[:, :, -1:, :]                     # (B,nc,1,H)
+
+    # intra-chunk: Y[i] = sum_{j<=i} exp(cs_i - cs_j) (C_i . B_j) dt_j x_j
+    scores = jnp.einsum("bcin,bcjn->bcij", Cr, Br,
+                        preferred_element_type=jnp.float32)
+    decay = cs[:, :, :, None, :] - cs[:, :, None, :, :]      # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(decay), 0.0)
+    M = scores[..., None] * L * dtr[:, :, None, :, :]        # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M.astype(x.dtype), xr)
+
+    # chunk input states: S_c = sum_j exp(cs_last - cs_j) dt_j B_j (x) x_j
+    w = jnp.exp(seg_last - cs) * dtr                         # (B,nc,Q,H)
+    chunk_state = jnp.einsum("bcjh,bcjn,bcjhp->bchpn",
+                             w.astype(x.dtype), Br.astype(x.dtype), xr)
+
+    # inter-chunk recurrence over chunk axis
+    seg_decay = jnp.exp(seg_last[:, :, 0, :]).astype(x.dtype)   # (B,nc,H)
+
+    def body(h, inp):
+        s_c, d_c = inp                                # (B,H,P,N), (B,H)
+        h_prev = h
+        h = h * d_c[:, :, None, None] + s_c
+        return h, h_prev
+
+    h0 = jnp.zeros((Bsz, H, P, N), x.dtype)
+    hN, h_prevs = lax.scan(
+        body, h0,
+        (chunk_state.transpose(1, 0, 2, 3, 4), seg_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)        # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcin,bchpn->bcihp", Cr.astype(x.dtype), h_prevs)
+    y_inter = y_inter * jnp.exp(cs)[..., None].astype(x.dtype)
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y, hN
+
+
+def ssd_forward(p, x, cfg: ModelConfig):
+    """Full-sequence SSD mixer. x: (B,S,D) -> (y, (ssm_state, conv_tail))."""
+    B, S, D = x.shape
+    s = cfg.ssm
+    d_in, nh, P, N = ssd_dims(cfg)
+
+    z = x @ p["w_z"]                                   # (B,S,d_in)
+    xbc = _causal_conv(x @ p["w_xbc"], p["conv_w"], p["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :d_in].reshape(B, S, nh, P)
+    Bm = xbc[..., d_in:d_in + N]
+    Cm = xbc[..., d_in + N:]
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if cfg.attention_impl == "pallas":
+        from repro.kernels.ops import ssd_scan as ssd_scan_kernel
+        y, h_final = ssd_scan_kernel(xs, dt, A, Bm, Cm, chunk=s.chunk_size)
+    else:
+        y, h_final = ssd_chunked(xs, dt, A, Bm, Cm, s.chunk_size)
+    y = y + xs * p["D_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, S, d_in)
+    y = _gated_rmsnorm(y, z, p["gate_norm"], cfg.norm_eps)
+    conv_tail = (x @ p["w_xbc"])[:, S - (s.conv_width - 1):, :]
+    return y @ p["w_out"], (h_final, conv_tail)
+
+
+def ssd_decode(p, x, ssm_state, conv_state, cfg: ModelConfig):
+    """One-token recurrent step.
+
+    x: (B,1,D); ssm_state: (B,H,P,N); conv_state: (B,cw-1,conv_ch).
+    """
+    B = x.shape[0]
+    s = cfg.ssm
+    d_in, nh, P, N = ssd_dims(cfg)
+
+    z = x @ p["w_z"]                                   # (B,1,d_in)
+    u = x @ p["w_xbc"]                                 # (B,1,conv_ch)
+    window = jnp.concatenate([conv_state, u], axis=1)  # (B,cw,conv_ch)
+    conv_out = jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(conv_out)[:, None, :]            # (B,1,conv_ch)
+
+    xs = xbc[..., :d_in].reshape(B, nh, P)
+    Bm = xbc[:, 0, d_in:d_in + N]                      # (B,N)
+    Cm = xbc[:, 0, d_in + N:]
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32)[:, 0] + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))       # (H,)
+
+    decay = jnp.exp(dt * A).astype(x.dtype)            # (B,H)
+    dx = (dt.astype(x.dtype))[..., None] * xs          # (B,H,P)
+    new_state = ssm_state * decay[:, :, None, None] + \
+        jnp.einsum("bhp,bn->bhpn", dx, Bm.astype(x.dtype))
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cm.astype(x.dtype))
+    y = y + xs * p["D_skip"].astype(x.dtype)[None, :, None]
+    y = y.reshape(B, 1, d_in)
+    y = _gated_rmsnorm(y, z, p["gate_norm"], cfg.norm_eps)
+    new_conv = window[:, 1:, :]
+    return y @ p["w_out"], (new_state, new_conv)

@@ -1,0 +1,8 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    global_norm,
+    sgd_update,
+)
+from repro.optim.schedule import cosine_warmup_schedule  # noqa: F401

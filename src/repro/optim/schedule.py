@@ -1,0 +1,18 @@
+"""LR schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+def cosine_warmup_schedule(cfg: OptimizerConfig):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = cfg.lr * step / jnp.maximum(1.0, cfg.warmup_steps)
+        denom = jnp.maximum(1.0, cfg.total_steps - cfg.warmup_steps)
+        frac = jnp.clip((step - cfg.warmup_steps) / denom, 0.0, 1.0)
+        cos = cfg.min_lr_ratio * cfg.lr + 0.5 * (1 - cfg.min_lr_ratio) * cfg.lr * (
+            1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < cfg.warmup_steps, warm, cos)
+    return lr

@@ -1,0 +1,133 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+    compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory     = HLO_bytes / (chips * HBM_bw)
+    collective = collective_bytes / (chips * link_bw)
+
+Hardware constants (TPU v5e-like, per task statement): 197 TFLOP/s bf16 per
+chip, 819 GB/s HBM, ~50 GB/s/link ICI. ``MODEL_FLOPS = 6 N D`` (dense; N =
+active params for MoE) per training step, ``2 N D`` for inference steps.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class Hardware:
+    peak_flops: float = 197e12        # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9             # bytes/s per chip
+    ici_bw: float = 50e9              # bytes/s per link
+    dcn_bw: float = 25e9              # bytes/s per chip across pods (est.)
+
+
+HW = Hardware()
+
+
+def collective_stats(hlo_text: str) -> dict:
+    from repro.roofline.hlo import summarize_collectives
+    return summarize_collectives(hlo_text)
+
+
+def roofline_from_record(rec: dict, hw: Hardware = HW) -> dict:
+    """rec: one dry-run JSON record (see launch/dryrun.py)."""
+    chips = rec["num_devices"]
+    flops = rec.get("flops", 0.0) or 0.0
+    bytes_acc = rec.get("bytes_accessed", 0.0) or 0.0
+    # HLO walk reports per-device numbers (shapes are post-GSPMD)
+    t_compute = flops / hw.peak_flops
+    t_memory_hlo = bytes_acc / hw.hbm_bw
+    t_memory = rec.get("analytic_bytes", bytes_acc) / hw.hbm_bw
+    coll = rec.get("collectives", {})
+    ici_b = coll.get("total_bytes", 0.0) - coll.get("dcn_bytes", 0.0)
+    dcn_b = coll.get("dcn_bytes", 0.0)
+    t_coll = ici_b / hw.ici_bw + dcn_b / hw.dcn_bw
+
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    out = dict(terms)
+    out["memory_hlo_s"] = t_memory_hlo
+    out["dominant"] = dominant.replace("_s", "")
+    model_flops = rec.get("model_flops")
+    if model_flops:
+        total_hlo_flops = flops * chips
+        out["model_flops"] = model_flops
+        out["useful_fraction"] = (model_flops / total_hlo_flops
+                                  if total_hlo_flops else None)
+    step_time = max(terms.values())
+    out["roofline_step_s"] = step_time
+    if model_flops and step_time > 0:
+        out["mfu_bound"] = model_flops / (chips * hw.peak_flops * step_time)
+    return out
+
+
+def analytic_memory_bytes(cfg, shape, num_devices: int) -> float:
+    """Analytic per-device HBM traffic per step (TPU fusion assumed).
+
+    The CPU-compiled HLO fuses far less than XLA:TPU, so byte counts walked
+    from it over-state TPU HBM traffic ~10-30x; this napkin model is what the
+    dominant-term call uses (both numbers are reported).
+
+    train:   params 3x (fwd + bwd + remat fwd) + grads w + adam m,v r/w (f32)
+             + layer-boundary activation saves (w+r) + logits r/w (f32)
+    prefill: params 1x + KV-cache write + boundary activations
+    decode:  params 1x + KV-cache read + write of one entry
+    """
+    import jax.numpy as jnp
+
+    p_bytes = cfg.param_count() * jnp.dtype(cfg.dtype).itemsize
+    active_bytes = cfg.active_param_count() * jnp.dtype(cfg.dtype).itemsize
+    d = cfg.d_model
+    act_itm = jnp.dtype(cfg.dtype).itemsize
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    tok_dev = tokens / num_devices
+
+    if shape.kind == "train":
+        remat_factor = 3.0 if cfg.remat != "none" else 2.0
+        traffic = p_bytes * remat_factor          # weight reads
+        traffic += p_bytes                        # grad write
+        traffic += cfg.param_count() * 4 * 4      # adam m,v read+write f32
+        layer_acts = cfg.num_layers * tokens * d * act_itm
+        traffic += 2 * layer_acts / num_devices * num_devices  # global
+        traffic += 2 * tokens * cfg.vocab_size * 4 / 16        # logits (TP)
+        # weights are sharded across all devices; activations per device
+        return (traffic / num_devices
+                + 2 * cfg.num_layers * tok_dev * d * act_itm)
+    if shape.kind == "prefill":
+        kv = _cache_bytes_per_token(cfg) * tokens
+        return (active_bytes / num_devices
+                + (kv + 2 * cfg.num_layers * tokens * d * act_itm)
+                / num_devices)
+    # decode: read whole cache + weights once per token step
+    kv_total = _cache_bytes_per_token(cfg) * shape.seq_len * shape.global_batch
+    return (active_bytes + kv_total) / num_devices
+
+
+def _cache_bytes_per_token(cfg) -> float:
+    import jax.numpy as jnp
+    itm = jnp.dtype(cfg.dtype).itemsize
+    if cfg.mla is not None:
+        return cfg.num_layers * (cfg.mla.kv_lora_rank
+                                 + cfg.mla.qk_rope_head_dim) * itm
+    if cfg.family == "ssm":
+        return 0.0        # O(1) state, not per token
+    if cfg.family == "hybrid":
+        # only local-attn layers cache, bounded by the window — amortised ~0
+        n_att = cfg.num_layers // len(cfg.rglru.pattern)
+        return n_att * 2 * cfg.num_kv_heads * cfg.head_dim * itm * \
+            min(1.0, cfg.rglru.window / 32768)
+    return cfg.num_layers * 2 * cfg.num_kv_heads * cfg.head_dim * itm
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N_active·D tokens (train) / 2·N_active·B (decode)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # one token per sequence

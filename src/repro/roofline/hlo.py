@@ -1,0 +1,340 @@
+"""HLO cost model: FLOPs, HBM bytes, and collective traffic from the
+(SPMD-partitioned) compiled HLO text.
+
+``compiled.cost_analysis()`` does NOT multiply ``while``-loop bodies by their
+trip count (layer scans report as a single iteration), so we walk the module
+ourselves:
+
+* computations are split out of the text; every op line defines
+  ``%name = TYPE op(...)`` giving a per-computation symbol table of shapes;
+* a call graph (while bodies/conditions, fusions, calls) propagates a
+  multiplicity to every computation — a dot inside a fusion inside an
+  80-trip layer scan counts 80x;
+* FLOPs come from ``dot``/``convolution`` ops (2 * |out| * contracted dim);
+* HBM bytes are approximated at fusion boundaries: for ops at control level
+  (entry / while bodies / called computations) we count operand + result
+  sizes, skipping fusion-internal ops (mirrors XLA's own bytes-accessed
+  convention);
+* collective bytes use the op result size — shapes in the partitioned module
+  are already per-shard, which is what the roofline's per-device collective
+  term needs.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# ops that touch HBM even after TPU fusion: matmuls/convs (operands stream
+# from HBM), data-movement ops, reductions, and fusion call sites themselves
+_HBM_OPS = frozenset({
+    "dot", "convolution", "fusion", "custom-call", "copy", "gather",
+    "scatter", "dynamic-update-slice", "dynamic-slice", "reduce",
+    "reduce-window", "sort", "cumsum", "all-gather", "all-reduce",
+    "reduce-scatter", "all-to-all", "collective-permute", "concatenate",
+    "pad", "slice",
+})
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0, "opaque": 0,
+}
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_TUPLE_SHAPE_RE = re.compile(r"^\(")
+_OP_RE = re.compile(r"^\s*(?:\([^)]*\)|[a-z0-9]+\[[\d,]*\][^ ]*)\s+"
+                    r"([a-z][\w\-]*)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)="
+                       r"\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\}?")
+_IOTA_GROUPS_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _parse_shapes(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group(2).split(",") if d.strip()]
+        out.append((dt, dims))
+    return out
+
+
+def _shape_bytes(shapes: List[Tuple[str, List[int]]]) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.lines: List[str] = []
+        self.defs: Dict[str, List[Tuple[str, List[int]]]] = {}
+        self.callees: List[Tuple[str, str]] = []   # (kind, callee)
+        self.is_fusion_target = False
+
+
+def _split_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        ln = raw.rstrip()
+        if not ln:
+            continue
+        stripped = ln.strip()
+        if stripped.startswith("HloModule"):
+            continue
+        if stripped.endswith("{") and ("->" in stripped
+                                       or stripped.startswith("ENTRY")):
+            head = stripped[:-1].strip()
+            is_entry = head.startswith("ENTRY")
+            if is_entry:
+                head = head[len("ENTRY"):].strip()
+            name = head.split("(")[0].strip().lstrip("%").strip()
+            if name:
+                cur = Computation(name)
+                comps[name] = cur
+                if is_entry:
+                    comps["__entry__"] = cur
+                continue
+        if stripped == "}":
+            continue
+        if cur is None:
+            continue
+        cur.lines.append(stripped)
+        dm = _DEF_RE.match(stripped)
+        if dm:
+            name, rhs = dm.group(1), dm.group(2)
+            # result type(s) = everything before the opcode's open paren
+            cur.defs[name] = _parse_shapes(rhs[:_first_paren(rhs)])
+        cm = _CALLS_RE.findall(stripped)
+        for grp in cm:
+            for callee in re.split(r",\s*%?", grp):
+                kind = "fusion" if "fusion(" in stripped else (
+                    "while" if "while(" in stripped else "call")
+                cur.callees.append((kind, callee))
+    return comps
+
+
+def _first_paren(s: str) -> int:
+    i = s.find("(")
+    return i if i >= 0 else len(s)
+
+
+def _opcode(line: str) -> Optional[str]:
+    dm = _DEF_RE.match(line)
+    rhs = dm.group(2) if dm else line
+    # rhs looks like: "bf16[8,128]{1,0} opcode(%a, %b), attrs..."
+    m = re.search(r"\}?\s([a-z][\w\-]*)\(", rhs)
+    return m.group(1) if m else None
+
+
+def _while_trip_count(cond: Computation) -> int:
+    consts = []
+    for ln in cond.lines:
+        for m in re.finditer(r"constant\((\d+)\)", ln):
+            consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def analyze_hlo(hlo: str, pod_size: int = 256) -> dict:
+    comps = _split_computations(hlo)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0,
+                "collectives": {"total_bytes": 0.0, "dcn_bytes": 0.0,
+                                "by_op": {}, "n_ops": 0}}
+
+    # ---- multiplicity propagation ----------------------------------------
+    mult: Dict[str, float] = defaultdict(float)
+    fusion_targets = set()
+
+    def visit2(comp: Computation, m: float):
+        if mult[comp.name] >= m:
+            return                    # already visited at >= multiplicity
+        mult[comp.name] = m
+        for ln in comp.lines:
+            if " while(" in ln:
+                bm = re.search(r"body=%?([\w.\-]+)", ln)
+                cm = re.search(r"condition=%?([\w.\-]+)", ln)
+                tm = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ln)
+                if bm and bm.group(1) in comps:
+                    cond = comps.get(cm.group(1)) if cm else None
+                    if tm:
+                        trip = int(tm.group(1))
+                    else:
+                        trip = _while_trip_count(cond) if cond else 1
+                    visit2(comps[bm.group(1)], m * max(1, trip))
+                    if cond:
+                        visit2(cond, m * max(1, trip))
+            else:
+                for attr in ("calls", "to_apply"):
+                    am = re.search(attr + r"=%?([\w.\-]+)", ln)
+                    if am and am.group(1) in comps:
+                        if "fusion(" in ln:
+                            fusion_targets.add(am.group(1))
+                        visit2(comps[am.group(1)], m)
+                bm = re.search(r"branch_computations=\{([^}]*)\}", ln)
+                if bm:
+                    for nm in re.split(r",\s*%?", bm.group(1)):
+                        nm = nm.strip().lstrip("%")
+                        if nm in comps:
+                            visit2(comps[nm], m)
+
+    mult.clear()
+    visit2(entry, 1.0)
+
+    # ---- walk ops ---------------------------------------------------------
+    flops = 0.0
+    bytes_hbm = 0.0
+    coll_total = 0.0
+    coll_dcn = 0.0
+    coll_by_op: Dict[str, float] = defaultdict(float)
+    n_coll = 0
+
+    for key, comp in comps.items():
+        if key == "__entry__":       # alias of the entry computation
+            continue
+        m = mult.get(comp.name, 0.0)
+        if m <= 0:
+            continue
+        in_fusion = comp.name in fusion_targets
+        for ln in comp.lines:
+            op = _opcode(ln)
+            if op is None:
+                continue
+            dm = _DEF_RE.match(ln)
+            out_shapes = comp.defs.get(dm.group(1), []) if dm else []
+            out_elems = sum(_n_elems(s) for s in out_shapes)
+
+            # FLOPs: dots and convolutions (counted even inside fusions)
+            if op == "dot":
+                cdims = _CONTRACT_RE.search(ln)
+                lhs = _first_operand_shape(ln, comp)
+                contracted = 1
+                if cdims and lhs:
+                    for d in cdims.group(1).split(","):
+                        if d.strip():
+                            contracted *= lhs[1][int(d)]
+                flops += m * 2.0 * out_elems * contracted
+            elif op == "convolution":
+                rhs_shape = _nth_operand_shape(ln, comp, 1)
+                kernel_elems = _n_elems((rhs_shape[0], rhs_shape[1])) \
+                    if rhs_shape else 0
+                out_ch = out_shapes[0][1][-1] if (out_shapes and
+                                                  out_shapes[0][1]) else 1
+                flops += m * 2.0 * out_elems * max(1, kernel_elems //
+                                                   max(1, out_ch))
+
+            # HBM bytes: control level only (fusion boundaries), and only ops
+            # that resist fusion on TPU — elementwise/layout ops are assumed
+            # fused into neighbours (the CPU backend fuses less than Mosaic/
+            # XLA:TPU, so counting every control-level op wildly over-states
+            # TPU HBM traffic).
+            if not in_fusion and op in _HBM_OPS:
+                opnd_bytes = _operand_bytes(ln, comp)
+                bytes_hbm += m * (_shape_bytes(out_shapes) + opnd_bytes)
+
+            # collectives
+            for cop in COLLECTIVE_OPS:
+                if op in (cop, cop + "-start"):
+                    b = m * _shape_bytes(out_shapes)
+                    coll_total += b
+                    coll_by_op[cop] += b
+                    n_coll += 1
+                    if _line_crosses_pod(ln, pod_size):
+                        coll_dcn += b
+                    break
+
+    return {"flops": flops, "bytes": bytes_hbm,
+            "collectives": {"total_bytes": coll_total, "dcn_bytes": coll_dcn,
+                            "by_op": dict(coll_by_op), "n_ops": n_coll}}
+
+
+def _n_elems(shape: Tuple[str, List[int]]) -> int:
+    n = 1
+    for d in shape[1]:
+        n *= d
+    return n
+
+
+def _operand_names(ln: str) -> List[str]:
+    i = ln.find("(")
+    j = ln.find(")", i)
+    if i < 0 or j < 0:
+        return []
+    return _OPERAND_RE.findall(ln[i + 1:j])
+
+
+def _first_operand_shape(ln, comp):
+    names = _operand_names(ln)
+    if names and names[0] in comp.defs and comp.defs[names[0]]:
+        return comp.defs[names[0]][0]
+    return None
+
+
+def _nth_operand_shape(ln, comp, n):
+    names = _operand_names(ln)
+    if len(names) > n and names[n] in comp.defs and comp.defs[names[n]]:
+        return comp.defs[names[n]][0]
+    return None
+
+
+def _operand_bytes(ln, comp) -> int:
+    total = 0
+    for nm in _operand_names(ln):
+        shapes = comp.defs.get(nm)
+        if shapes:
+            total += _shape_bytes(shapes)
+    return total
+
+
+def _crosses_pod(groups: str, pod_size: int = 256) -> bool:
+    for grp in re.finditer(r"\{([\d,\s]+)\}", "{" + groups + "}"):
+        ids = [int(x) for x in grp.group(1).replace(" ", "").split(",") if x]
+        if ids and (min(ids) // pod_size) != (max(ids) // pod_size):
+            return True
+    return False
+
+
+def _line_crosses_pod(ln: str, pod_size: int = 256) -> bool:
+    """Handle both explicit {{0,1},{2,3}} and iota [G,N]<=[dims]T(perm)
+    replica-group encodings."""
+    im = _IOTA_GROUPS_RE.search(ln)
+    if im:
+        import numpy as _np
+        g, n = int(im.group(1)), int(im.group(2))
+        dims = [int(x) for x in im.group(3).split(",")]
+        total = 1
+        for d in dims:
+            total *= d
+        ids = _np.arange(total).reshape(dims)
+        if im.group(4):
+            perm = [int(x) for x in im.group(4).split(",")]
+            ids = ids.transpose(perm)
+        ids = ids.reshape(g, n)
+        pods = ids // pod_size
+        return bool((pods.min(axis=1) != pods.max(axis=1)).any())
+    gm = _GROUPS_RE.search(ln)
+    if gm:
+        return _crosses_pod(gm.group(1), pod_size)
+    return False
+
+
+def summarize_collectives(hlo: str) -> dict:
+    return analyze_hlo(hlo)["collectives"]

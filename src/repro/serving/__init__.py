@@ -1,0 +1,2 @@
+from repro.serving.cache_utils import pad_cache, cache_bytes  # noqa: F401
+from repro.serving.engine import ServeEngine  # noqa: F401

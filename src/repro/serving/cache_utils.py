@@ -1,0 +1,64 @@
+"""KV/state cache utilities.
+
+``decode_step`` writes into fixed-size buffers at a position index. After a
+prefill of length S, the cache buffers have length S; to keep decoding we pad
+them to the target budget once (cheap, one concat) and then decode in place.
+Window caches (sliding-window attention, hybrid local attention) roll instead
+and never grow.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+from repro.sharding.partitioning import ParamSpec
+
+
+def _cache_len_axes(model: Model, batch: int, seq_len: int) -> dict:
+    """Map cache leaf path -> axis index of 'cache_len' (or None)."""
+    t = model.cache_template(batch, seq_len)
+    flat, _ = jax.tree.flatten_with_path(
+        t, is_leaf=lambda x: isinstance(x, ParamSpec))
+    out = {}
+    for path, spec in flat:
+        key = tuple(str(getattr(p, "key", p)) for p in path)
+        out[key] = spec.axes.index("cache_len") if "cache_len" in spec.axes \
+            else None
+    return out
+
+
+def pad_cache(model: Model, cache, n_extra: int, batch: int, seq_len: int):
+    """Grow every cache_len axis by ``n_extra`` zero slots (append budget).
+
+    Window caches (length == window) are returned untouched — they roll.
+    """
+    cfg = model.cfg
+    axes = _cache_len_axes(model, batch, seq_len)
+    window = cfg.sliding_window or (cfg.rglru.window if cfg.rglru else 0)
+
+    def pad(path, leaf):
+        key = tuple(str(getattr(p, "key", p)) for p in path)
+        ax = axes.get(key)
+        if ax is None:
+            return leaf
+        if window and leaf.shape[ax] == min(window, seq_len):
+            if cfg.rglru is not None or cfg.sliding_window:
+                return leaf           # rolling window cache
+        if "xk" in key or "xv" in key:
+            return leaf               # whisper cross-attn cache is fixed
+        pad_widths = [(0, 0)] * leaf.ndim
+        pad_widths[ax] = (0, n_extra)
+        return jnp.pad(leaf, pad_widths)
+
+    flat, treedef = jax.tree.flatten_with_path(cache)
+    return jax.tree.unflatten(treedef, [pad(p, l) for p, l in flat])
+
+
+def cache_bytes(model: Model, batch: int, seq_len: int) -> int:
+    t = model.cache_template(batch, seq_len)
+    leaves = jax.tree.leaves(t, is_leaf=lambda x: isinstance(x, ParamSpec))
+    dt = jnp.dtype(model.cfg.dtype)
+    return sum(int(np.prod(s.shape)) * (jnp.dtype(s.dtype or dt).itemsize)
+               for s in leaves)

@@ -1,0 +1,51 @@
+"""Minimal batched serving engine: prefill once, decode greedily/sampled.
+
+This is the CPU-scale engine used by the examples and integration tests; the
+production path is ``repro.launch.serve`` which lowers the same
+``decode_step`` under the multi-pod mesh.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.serving.cache_utils import pad_cache
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, max_new_tokens: int = 32):
+        self.model = model
+        self.params = params
+        self.max_new = max_new_tokens
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step)
+
+    def generate(self, batch: dict, *, temperature: float = 0.0,
+                 key: Optional[jax.Array] = None):
+        """batch: same structure as training batch (tokens + frontend).
+
+        Returns (B, max_new) generated token ids (greedy if temperature=0).
+        """
+        cfg = self.model.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        n_front = cfg.frontend.num_tokens if cfg.family == "vlm" else 0
+        logits, cache = self._prefill(self.params, batch)
+        cache = pad_cache(self.model, cache, self.max_new, B, S + n_front)
+
+        out = []
+        pos = S + n_front
+        for i in range(self.max_new):
+            if temperature > 0.0:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(sub, logits / temperature)
+            else:
+                tok = jnp.argmax(logits, axis=-1)
+            out.append(tok)
+            logits, cache = self._decode(
+                self.params, cache, tok[:, None].astype(jnp.int32),
+                jnp.asarray(pos + i, jnp.int32))
+        return jnp.stack(out, axis=1)

@@ -1,0 +1,122 @@
+"""Continuous-batching serving scheduler (vLLM-style, CPU-scale).
+
+Requests arrive with different prompt lengths and token budgets; the
+scheduler keeps a fixed number of decode slots busy: when a sequence
+finishes (EOS or budget), its slot is refilled by prefilling the next queued
+request and splicing its cache entries into the batch cache at the free slot.
+
+Works with every cache family (KV / MLA-latent / SSM-state / RG-LRU) via the
+cache pytrees' batch axis, which `Model.cache_template` exposes as axis 1 of
+every leaf ('layers', 'batch', ...).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+from repro.serving.cache_utils import pad_cache
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray              # (prompt_len,)
+    max_new_tokens: int
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    """Fixed-slot continuous batching over a shared decode cache."""
+
+    def __init__(self, model: Model, params, *, slots: int = 4,
+                 max_len: int = 256, eos_id: Optional[int] = None):
+        if model.cfg.family in ("vlm", "audio"):
+            raise NotImplementedError("text-only scheduler")
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(model.prefill)
+        self.queue: List[Request] = []
+        self.active: List[Optional[Request]] = [None] * slots
+        self.cache = None
+        self.pos = np.zeros(slots, np.int64)      # per-slot write position
+        self.last_tok = np.zeros(slots, np.int64)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _prefill_one(self, req: Request):
+        """Prefill a single request and return (next_token, slot_cache)."""
+        toks = jnp.asarray(req.tokens[None, :], jnp.int32)
+        logits, cache = self._prefill(self.params, {"tokens": toks})
+        cache = pad_cache(self.model, cache,
+                          self.max_len - len(req.tokens), 1,
+                          len(req.tokens))
+        return int(jnp.argmax(logits, -1)[0]), cache
+
+    def _splice(self, slot: int, slot_cache):
+        """Write a 1-batch cache into the batched cache at ``slot``."""
+        if self.cache is None:
+            # initialise the batched cache with zeros like slot_cache
+            self.cache = jax.tree.map(
+                lambda x: jnp.zeros((x.shape[0], self.slots) + x.shape[2:],
+                                    x.dtype), slot_cache)
+        self.cache = jax.tree.map(
+            lambda full, one: full.at[:, slot].set(one[:, 0]),
+            self.cache, slot_cache)
+
+    def _refill_slots(self):
+        for s in range(self.slots):
+            if self.active[s] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            tok, slot_cache = self._prefill_one(req)
+            self._splice(s, slot_cache)
+            self.active[s] = req
+            self.pos[s] = len(req.tokens)
+            self.last_tok[s] = tok
+            req.out.append(tok)
+
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        """One decode step across all busy slots. Returns False when idle."""
+        self._refill_slots()
+        busy = [s for s in range(self.slots) if self.active[s] is not None]
+        if not busy:
+            return False
+        # single batched decode with PER-SLOT positions (sequences are at
+        # different depths); idle slots decode garbage that is ignored
+        toks = jnp.asarray(self.last_tok[:, None], jnp.int32)
+        logits, self.cache = self._decode(self.params, self.cache, toks,
+                                          jnp.asarray(self.pos, jnp.int32))
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        for s in busy:
+            req = self.active[s]
+            tok = int(nxt[s])
+            req.out.append(tok)
+            self.last_tok[s] = tok
+            self.pos[s] += 1
+            if (len(req.out) >= req.max_new_tokens
+                    or (self.eos_id is not None and tok == self.eos_id)
+                    or self.pos[s] >= self.max_len - 1):
+                req.done = True
+                self.active[s] = None
+        return True
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        finished: List[Request] = []
+        all_reqs = list(self.queue)
+        for _ in range(max_steps):
+            if not self.step():
+                break
+        return [r for r in all_reqs if r.done] or all_reqs

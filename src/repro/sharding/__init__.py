@@ -1,0 +1,11 @@
+from repro.sharding.partitioning import (  # noqa: F401
+    DEFAULT_RULES,
+    MULTIPOD_RULES,
+    ParamSpec,
+    batch_axes,
+    init_params,
+    logical_to_pspec,
+    param_pspecs,
+    param_shape_structs,
+    template_bytes,
+)

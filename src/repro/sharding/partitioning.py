@@ -1,0 +1,241 @@
+"""Logical-axis partitioning.
+
+Models declare parameters as :class:`ParamSpec` templates — shape, dtype,
+*logical* axis names, and an initializer tag. One template tree serves three
+consumers:
+
+* ``init_params``        — materialize real arrays (CPU smoke tests, examples)
+* ``param_pspecs``       — map logical axes -> mesh axes (`PartitionSpec`s)
+* ``param_shape_structs``— `ShapeDtypeStruct`s for the AOT multi-pod dry-run
+
+Rules follow the MaxText-style FSDP+TP recipe: the contraction/embed dim of
+large kernels shards over ``data`` (FSDP), heads/mlp/experts/vocab shard over
+``model`` (TP), batch shards over ``data`` (and ``pod`` when present). A
+logical axis is silently replicated when the concrete dim is not divisible by
+the mesh-axis size (e.g. 8 KV heads on a 16-way model axis).
+"""
+from __future__ import annotations
+
+import math
+from contextlib import contextmanager
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class ParamSpec(NamedTuple):
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis name per dim (None = replicated)
+    init: str = "normal"              # normal|zeros|ones|scaled_normal|embed|ssm_a|conv
+    dtype: Any = None                 # None => model default
+
+
+# logical axis -> mesh axis (or tuple of mesh axes)
+DEFAULT_RULES = {
+    "dc": None,               # stacked Data-Collector dim (HTL trainer)
+    "batch": "data",
+    "cache_len": "model",
+    "vocab": "model",
+    "embed": "data",          # FSDP: shard the embed/contraction dim of kernels
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    # expert parallelism: 'model' alone for training/prefill (GSPMD's
+    # dispatch lowering regresses at EP-256 there); decode uses
+    # 'experts_both' = ('data','model') via workload-specific rules (§Perf)
+    "experts": "model",
+    "experts_both": ("data", "model"),
+    "lru": "model",
+    "layers": None,
+    "head_dim": None,
+    "state": None,
+    "seq": None,
+    "qseq": "model",          # context-parallel attention (§Perf)
+    "conv": None,
+    "qk_rope": None,
+    "latent": None,
+}
+
+MULTIPOD_RULES = dict(DEFAULT_RULES, batch=("pod", "data"), dc="pod")
+
+
+def _axis_size(mesh: Mesh, mesh_axes) -> int:
+    if mesh_axes is None:
+        return 1
+    if isinstance(mesh_axes, str):
+        mesh_axes = (mesh_axes,)
+    return math.prod(mesh.shape[a] for a in mesh_axes)
+
+
+def logical_to_pspec(axes: Sequence[Optional[str]], shape: Sequence[int],
+                     mesh: Mesh, rules: dict) -> P:
+    """Resolve logical axes to a PartitionSpec, replicating non-divisible dims."""
+    out = []
+    used: set = set()
+    for dim, name in zip(shape, axes):
+        mesh_axes = rules.get(name) if name is not None else None
+        if mesh_axes is None:
+            out.append(None)
+            continue
+        flat = (mesh_axes,) if isinstance(mesh_axes, str) else tuple(mesh_axes)
+        # never reuse a mesh axis within one spec
+        flat = tuple(a for a in flat if a not in used and a in mesh.shape)
+        # require divisibility; degrade gracefully by dropping leading axes
+        # (e.g. experts=('data','model'): 64 experts can't shard 256-way but
+        # can shard 16-way on 'model' alone)
+        while flat and dim % math.prod(mesh.shape[a] for a in flat) != 0:
+            flat = flat[1:]
+        if not flat:
+            out.append(None)
+            continue
+        used.update(flat)
+        out.append(flat[0] if len(flat) == 1 else flat)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_pspecs(template, mesh: Mesh, rules: dict = None):
+    rules = rules or DEFAULT_RULES
+    return jax.tree.map(
+        lambda s: logical_to_pspec(s.axes, s.shape, mesh, rules),
+        template, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_shape_structs(template, default_dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or default_dtype),
+        template, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def template_bytes(template, default_dtype=jnp.bfloat16) -> int:
+    leaves = jax.tree.leaves(template, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype or default_dtype).itemsize
+               for s in leaves)
+
+
+def batch_axes(multi_pod: bool) -> Tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+# ---------------------------------------------------------------------------
+# Ambient mesh + activation sharding hints
+#
+# FSDP shards the embed/contraction dim of *weights* over 'data'; without
+# explicit activation constraints GSPMD propagates that onto activations and
+# evicts batch sharding (observed: global-batch tensors inside layer scans).
+# Models call ``hint(x, logical_axes)`` at activation boundaries; it is a
+# no-op outside a ``use_compute_mesh`` context (CPU smoke tests).
+# ---------------------------------------------------------------------------
+
+_CURRENT_MESH: Optional[Mesh] = None
+
+
+@contextmanager
+def use_compute_mesh(mesh: Mesh):
+    global _CURRENT_MESH
+    prev = _CURRENT_MESH
+    _CURRENT_MESH = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _CURRENT_MESH = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CURRENT_MESH
+
+
+def hint(x, axes: Sequence[Optional[str]]):
+    """Constrain an activation to its logical sharding under the ambient mesh.
+
+    Under the HTL trainer the model runs vmapped over a stacked Data-Collector
+    dim; extra leading dims are treated as the 'dc' logical axis.
+    """
+    mesh = _CURRENT_MESH
+    if mesh is None:
+        return x
+    axes = tuple(axes)
+    while len(axes) < x.ndim:
+        axes = ("dc",) + axes
+    if len(axes) != x.ndim:
+        return x
+    rules = MULTIPOD_RULES if "pod" in mesh.axis_names else DEFAULT_RULES
+    spec = logical_to_pspec(axes, x.shape, mesh, rules)
+    manual = _manual_axes()
+    if manual:
+        spec = P(*[_strip_axes(e, manual) for e in spec])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _manual_axes() -> set:
+    """Mesh axes currently under shard_map manual control (must not appear
+    in sharding constraints issued from inside the mapped function)."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is None or am.empty:
+            return set()
+        return {n for n, t in zip(am.axis_names, am.axis_types)
+                if "Manual" in str(t)}
+    except Exception:                      # noqa: BLE001
+        return set()
+
+
+def _strip_axes(entry, manual: set):
+    if entry is None:
+        return None
+    t = entry if isinstance(entry, tuple) else (entry,)
+    t = tuple(a for a in t if a not in manual)
+    if not t:
+        return None
+    return t[0] if len(t) == 1 else t
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def _init_leaf(key, spec: ParamSpec, default_dtype) -> jax.Array:
+    dtype = spec.dtype or default_dtype
+    shape = spec.shape
+    if spec.init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(shape, dtype)
+    if spec.init == "ssm_a":
+        # mamba: A_log ~ log(Uniform[1, 16))
+        u = jax.random.uniform(key, shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if spec.init == "dt_bias":
+        u = jax.random.uniform(key, shape, jnp.float32, 1e-3, 1e-1)
+        return jnp.log(jnp.expm1(u)).astype(dtype)   # inv softplus
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = {"normal": 0.02,
+             "scaled_normal": 0.02,          # residual-out projections
+             "embed": 0.02,
+             "conv": 1.0 / math.sqrt(max(1, shape[0])),
+             }.get(spec.init, 1.0 / math.sqrt(max(1, fan_in)))
+    if spec.init == "fan_in":
+        scale = 1.0 / math.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_params(template, key: jax.Array, default_dtype=jnp.float32):
+    """Materialize a param tree from a template, one folded key per leaf path."""
+    leaves, treedef = jax.tree.flatten_with_path(
+        template, is_leaf=lambda x: isinstance(x, ParamSpec))
+    out = []
+    for i, (path, spec) in enumerate(leaves):
+        k = jax.random.fold_in(key, i)
+        out.append(_init_leaf(k, spec, default_dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def make_shardings(template, mesh: Mesh, rules: dict = None):
+    specs = param_pspecs(template, mesh, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

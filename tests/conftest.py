@@ -1,0 +1,9 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+# NOTE: deliberately NOT setting xla_force_host_platform_device_count here —
+# smoke tests and benchmarks must see the real single CPU device; only
+# repro/launch/dryrun.py (its own process) forces 512 placeholder devices.

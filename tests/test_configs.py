@@ -1,0 +1,82 @@
+"""Config registry: all 10 assigned architectures, exact dims, param counts."""
+import pytest
+
+from repro.configs import ALL_ARCHS, INPUT_SHAPES, get_config, list_configs
+
+EXPECTED = {
+    "whisper-medium": dict(num_layers=24, d_model=1024, num_heads=16,
+                           num_kv_heads=16, d_ff=4096, vocab_size=51865),
+    "llava-next-mistral-7b": dict(num_layers=32, d_model=4096, num_heads=32,
+                                  num_kv_heads=8, d_ff=14336,
+                                  vocab_size=32000),
+    "mamba2-1.3b": dict(num_layers=48, d_model=2048, vocab_size=50280),
+    "qwen2-72b": dict(num_layers=80, d_model=8192, num_heads=64,
+                      num_kv_heads=8, d_ff=29568, vocab_size=152064,
+                      qkv_bias=True),
+    "recurrentgemma-9b": dict(num_layers=38, d_model=4096, num_heads=16,
+                              num_kv_heads=1, d_ff=12288, vocab_size=256000),
+    "minicpm3-4b": dict(num_layers=62, d_model=2560, num_heads=40,
+                        d_ff=6400, vocab_size=73448),
+    "llama3.2-3b": dict(num_layers=28, d_model=3072, num_heads=24,
+                        num_kv_heads=8, d_ff=8192, vocab_size=128256),
+    "olmoe-1b-7b": dict(num_layers=16, d_model=2048, num_heads=16,
+                        num_kv_heads=16, d_ff=1024, vocab_size=50304),
+    "granite-3-8b": dict(num_layers=40, d_model=4096, num_heads=32,
+                         num_kv_heads=8, d_ff=12800, vocab_size=49155),
+    "deepseek-v3-671b": dict(num_layers=61, d_model=7168, num_heads=128,
+                             d_ff=2048, vocab_size=129280),
+}
+
+# total-parameter sanity bands (billions)
+PARAM_BANDS = {
+    "whisper-medium": (0.6, 1.2), "llava-next-mistral-7b": (6.5, 8.0),
+    "mamba2-1.3b": (1.1, 1.6), "qwen2-72b": (68, 77),
+    "recurrentgemma-9b": (8, 10.5), "minicpm3-4b": (3.4, 4.6),
+    "llama3.2-3b": (2.8, 3.7), "olmoe-1b-7b": (6.2, 7.6),
+    "granite-3-8b": (7.3, 9.0), "deepseek-v3-671b": (630, 720),
+}
+
+
+def test_all_archs_registered():
+    cfgs = list_configs()
+    assert set(ALL_ARCHS) <= set(cfgs)
+    assert len(ALL_ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_exact_dims(arch):
+    cfg = get_config(arch)
+    for k, v in EXPECTED[arch].items():
+        assert getattr(cfg, k) == v, f"{arch}.{k}"
+    assert cfg.source
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_param_counts(arch):
+    lo, hi = PARAM_BANDS[arch]
+    n = get_config(arch).param_count() / 1e9
+    assert lo <= n <= hi, f"{arch}: {n:.2f}B outside [{lo},{hi}]"
+
+
+def test_moe_active_params():
+    ds = get_config("deepseek-v3-671b")
+    assert 30e9 <= ds.active_param_count() <= 45e9      # ~37B
+    ol = get_config("olmoe-1b-7b")
+    assert 1.0e9 <= ol.active_param_count() <= 1.6e9    # ~1.3B
+
+
+def test_input_shapes():
+    assert INPUT_SHAPES["train_4k"].seq_len == 4096
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].global_batch == 32
+    assert INPUT_SHAPES["decode_32k"].global_batch == 128
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_reduced_variants_small(arch):
+    r = get_config(arch).reduced()
+    assert r.num_layers == 2
+    assert r.d_model <= 512
+    if r.moe is not None:
+        assert r.moe.num_experts <= 4

@@ -1,0 +1,31 @@
+"""End-to-end dry-run smoke: one cheap combo in a subprocess (the dry-run
+must own its process — it forces 512 placeholder host devices before any
+jax import, which cannot happen inside the pytest process)."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.mark.slow
+def test_dryrun_one_combo_subprocess():
+    with tempfile.TemporaryDirectory() as d:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+             "mamba2-1.3b", "--shape", "long_500k", "--mesh", "pod1",
+             "--out", d],
+            env=env, capture_output=True, text=True, timeout=540)
+        assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+        rec = json.load(open(os.path.join(
+            d, "mamba2-1.3b_long_500k_pod1.json")))
+        assert rec["status"] == "ok"
+        assert rec["num_devices"] == 256
+        assert rec["hlo_flops"] > 0
+        assert "collectives" in rec

@@ -1,0 +1,96 @@
+"""Energy model: paper Table-1 constants, calibration against the paper's
+headline numbers, and hypothesis property tests on the ledger."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.energy import Ledger, MODEL_BYTES, OBS_BYTES, TECHS
+
+
+def test_table1_constants():
+    assert TECHS["4g"].tx_mw == 2100 and TECHS["4g"].up_mbps == 75
+    assert TECHS["nbiot"].tx_mw == 199 and TECHS["nbiot"].up_mbps == 0.2
+    assert TECHS["802.15.4"].tx_mw == 3
+    assert TECHS["wifi"].tx_mw == 1080 and TECHS["wifi"].rx_mw == 740
+
+
+def test_edge_only_benchmark_calibration():
+    """Paper: 10 000 observations over NB-IoT = 34 477 mJ (Section 6.1)."""
+    led = Ledger()
+    for _ in range(100):
+        led.collect_to_edge(100)
+    assert led.total() == pytest.approx(34477, rel=0.005)
+
+
+def test_mule_collection_calibration():
+    """Paper: the same 10 000 observations over 802.15.4 = 1 728 mJ."""
+    led = Ledger()
+    for _ in range(100):
+        led.collect_to_mule(100)
+    assert led.total() == pytest.approx(1728, rel=0.005)
+
+
+def test_collection_saving_headline():
+    """The >=94% headline saving follows from the technology switch."""
+    e_edge, e_mule = Ledger(), Ledger()
+    e_edge.collect_to_edge(10000)
+    e_mule.collect_to_mule(10000)
+    assert 1 - e_mule.total() / e_edge.total() > 0.94
+
+
+def test_wifi_star_topology_relay():
+    """Non-AP unicasts relay through the AP: twice the energy."""
+    led = Ledger()
+    direct = led.unicast("wifi", MODEL_BYTES, src_is_ap=True)
+    relayed = led.unicast("wifi", MODEL_BYTES)
+    assert relayed == pytest.approx(2 * direct)
+
+
+def test_edge_server_is_mains_powered():
+    led = Ledger()
+    to_es = led.unicast("4g", MODEL_BYTES, dst_is_es=True)
+    to_sm = led.unicast("4g", MODEL_BYTES)
+    assert to_es < to_sm                      # ES rx not charged
+    assert to_es == pytest.approx(TECHS["4g"].tx_mj(MODEL_BYTES))
+
+
+# ---------------------------------------------------------------------------
+# property tests
+# ---------------------------------------------------------------------------
+
+@given(nbytes=st.integers(min_value=1, max_value=10**9),
+       tech=st.sampled_from(list(TECHS)))
+@settings(max_examples=50, deadline=None)
+def test_energy_linear_in_bytes(nbytes, tech):
+    t = TECHS[tech]
+    assert t.tx_mj(2 * nbytes) == pytest.approx(2 * t.tx_mj(nbytes))
+    assert t.tx_mj(nbytes) >= 0
+
+
+@given(nbytes=st.integers(min_value=1, max_value=10**7))
+@settings(max_examples=30, deadline=None)
+def test_technology_ranking_for_collection(nbytes):
+    """802.15.4 must always beat NB-IoT per byte (the paper's key driver)."""
+    assert TECHS["802.15.4"].tx_mj(nbytes) < TECHS["nbiot"].tx_mj(nbytes)
+
+
+@given(events=st.lists(
+    st.tuples(st.sampled_from(list(TECHS)),
+              st.integers(min_value=1, max_value=10**6),
+              st.sampled_from(["collection", "learning"])),
+    min_size=0, max_size=30))
+@settings(max_examples=30, deadline=None)
+def test_ledger_additivity(events):
+    led = Ledger()
+    total = 0.0
+    for tech, nbytes, purpose in events:
+        total += led.add(tech, nbytes, purpose=purpose)
+    assert led.total() == pytest.approx(total)
+    assert led.total() == pytest.approx(
+        led.total("collection") + led.total("learning"))
+    assert led.total() == pytest.approx(sum(led.by_tech().values()))
+
+
+def test_observation_wire_size():
+    assert OBS_BYTES == 54 * 8 + 1
+    assert MODEL_BYTES == 55 * 7 * 4

@@ -1,0 +1,42 @@
+"""HLO parsing edge cases: iota replica groups, manual-axis stripping."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.roofline.hlo import _line_crosses_pod
+from repro.sharding.partitioning import _strip_axes
+
+
+def test_iota_groups_within_pod():
+    # [16,32]<=[32,16]T(1,0): groups of 32 with stride 16 over 512 devices —
+    # each group spans ids {j, 16+j, ..., 496+j}: crosses the 256 boundary
+    ln = ('%ar = f32[8] all-reduce(%x), replica_groups=[16,32]<=[32,16]T(1,0)'
+          ', to_apply=%add')
+    assert _line_crosses_pod(ln, pod_size=256)
+
+
+def test_iota_groups_contiguous_no_cross():
+    # [2,256]<=[512]: two contiguous groups of 256 = exactly the two pods
+    ln = '%ag = f32[8] all-gather(%x), replica_groups=[2,256]<=[512]'
+    assert not _line_crosses_pod(ln, pod_size=256)
+
+
+def test_iota_groups_cross():
+    # [256,2]<=[2,256]T(1,0): pairs (i, i+256) — every group crosses
+    ln = '%cp = f32[8] all-to-all(%x), replica_groups=[256,2]<=[2,256]T(1,0)'
+    assert _line_crosses_pod(ln, pod_size=256)
+
+
+def test_explicit_groups():
+    assert _line_crosses_pod(
+        '%ar = f32[2] all-reduce(%x), replica_groups={{0,256}}', 256)
+    assert not _line_crosses_pod(
+        '%ar = f32[2] all-reduce(%x), replica_groups={{0,1},{256,257}}', 256)
+
+
+def test_strip_axes():
+    assert _strip_axes(("pod", "data"), {"pod"}) == "data"
+    assert _strip_axes("pod", {"pod"}) is None
+    assert _strip_axes("data", {"pod"}) == "data"
+    assert _strip_axes(None, {"pod"}) is None
+    assert _strip_axes(("pod", "data", "model"), {"pod"}) == ("data", "model")

@@ -1,0 +1,154 @@
+"""Paper-core behaviour: SVM, GreedyTL transfer, election, HTL windows,
+aggregation heuristic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.energy import Ledger, MODEL_BYTES, OBS_BYTES
+from repro.core.greedytl import greedytl
+from repro.core.htl import (DC, apply_aggregation_heuristic, label_entropy,
+                            run_window_a2a, run_window_star)
+from repro.core.metrics import f_measure
+from repro.core.svm import pad_local, svm_predict, train_svm
+from repro.data.synthetic_covtype import make_covtype_like
+
+DATA = make_covtype_like(seed=0)
+XT = jnp.asarray(DATA.x_test.astype(np.float32))
+
+
+def _f1(w):
+    return f_measure(DATA.y_test, np.asarray(svm_predict(w, XT)), 7)
+
+
+def _svm_on(n, start=0):
+    x = DATA.x_train[start:start + n].astype(np.float32)
+    y = DATA.y_train[start:start + n]
+    xp, yp, mp = pad_local(x, y, max(n, 160))
+    return np.asarray(train_svm(jnp.asarray(xp), jnp.asarray(yp),
+                                jnp.asarray(mp), num_classes=7))
+
+
+def test_svm_learns():
+    w = _svm_on(4000)
+    assert _f1(w) > 0.6
+
+
+def test_svm_masking_equivalence():
+    """Padding with masked rows must not change the solution."""
+    x = DATA.x_train[:100].astype(np.float32)
+    y = DATA.y_train[:100]
+    x1, y1, m1 = pad_local(x, y, 100)
+    x2, y2, m2 = pad_local(x, y, 200)
+    w1 = train_svm(jnp.asarray(x1), jnp.asarray(y1), jnp.asarray(m1),
+                   num_classes=7)
+    w2 = train_svm(jnp.asarray(x2), jnp.asarray(y2), jnp.asarray(m2),
+                   num_classes=7)
+    assert float(jnp.max(jnp.abs(w1 - w2))) < 1e-4
+
+
+def test_greedytl_transfers_from_strong_source():
+    strong = _svm_on(5000)
+    x = DATA.x_train[6000:6050].astype(np.float32)
+    y = DATA.y_train[6000:6050]
+    xp, yp, mp = pad_local(x, y, 160)
+    local = np.asarray(train_svm(jnp.asarray(xp), jnp.asarray(yp),
+                                 jnp.asarray(mp), num_classes=7))
+    src = np.zeros((16, 55, 7), np.float32)
+    sm = np.zeros(16, np.float32)
+    src[0] = strong
+    sm[0] = 1
+    w_eff, sel = greedytl(jnp.asarray(xp), jnp.asarray(yp), jnp.asarray(mp),
+                          jnp.asarray(src), jnp.asarray(sm), num_classes=7)
+    assert bool(np.asarray(sel)[0]), "strong source must be selected"
+    assert _f1(w_eff) > _f1(local) + 0.05, \
+        "transfer must beat the local-only model"
+
+
+def test_greedytl_ensemble_of_weak_sources():
+    """Combining several weak sources should beat each of them."""
+    weaks = [_svm_on(30, start=7000 + i * 30) for i in range(5)]
+    weak_best = max(_f1(w) for w in weaks)
+    x = DATA.x_train[6000:6100].astype(np.float32)
+    y = DATA.y_train[6000:6100]
+    xp, yp, mp = pad_local(x, y, 160)
+    src = np.zeros((16, 55, 7), np.float32)
+    sm = np.zeros(16, np.float32)
+    for i, w in enumerate(weaks):
+        src[i] = w
+        sm[i] = 1
+    w_eff, _ = greedytl(jnp.asarray(xp), jnp.asarray(yp), jnp.asarray(mp),
+                        jnp.asarray(src), jnp.asarray(sm), num_classes=7)
+    assert _f1(w_eff) > weak_best + 0.03
+
+
+def test_greedytl_ignores_invalid_sources():
+    """Masked-out (garbage) sources must not affect the result."""
+    x = DATA.x_train[:80].astype(np.float32)
+    y = DATA.y_train[:80]
+    xp, yp, mp = pad_local(x, y, 160)
+    strong = _svm_on(3000)
+    src = np.zeros((16, 55, 7), np.float32)
+    sm = np.zeros(16, np.float32)
+    src[0] = strong
+    sm[0] = 1
+    w1, _ = greedytl(jnp.asarray(xp), jnp.asarray(yp), jnp.asarray(mp),
+                     jnp.asarray(src), jnp.asarray(sm), num_classes=7)
+    src2 = src.copy()
+    src2[5:] = 1e3          # garbage in masked slots
+    w2, _ = greedytl(jnp.asarray(xp), jnp.asarray(yp), jnp.asarray(mp),
+                     jnp.asarray(src2), jnp.asarray(sm), num_classes=7)
+    assert float(jnp.max(jnp.abs(w1 - w2))) < 1e-3
+
+
+def test_label_entropy():
+    assert label_entropy(np.array([0, 1, 2, 3, 4, 5, 6]), 7) == \
+        pytest.approx(1.0)
+    assert label_entropy(np.zeros(10, np.int64), 7) == pytest.approx(0.0)
+    balanced = label_entropy(np.arange(70) % 7, 7)
+    skewed = label_entropy(np.array([0] * 60 + [1] * 10), 7)
+    assert balanced > skewed
+
+
+def _window_dcs(ns, start=0):
+    dcs, ofs = [], start
+    for i, n in enumerate(ns):
+        dcs.append(DC(f"SM{i + 1}", DATA.x_train[ofs:ofs + n].astype(
+            np.float32), DATA.y_train[ofs:ofs + n]))
+        ofs += n
+    return dcs
+
+
+@pytest.mark.parametrize("run", [run_window_a2a, run_window_star])
+def test_window_round(run):
+    dcs = _window_dcs([55, 20, 10, 8, 4, 2, 1])
+    ledger = Ledger()
+    w = run(dcs, None, ledger, "4g", cap=160, num_classes=7)
+    assert w.shape == (55, 7)
+    assert np.isfinite(w).all()
+    assert ledger.total("learning") > 0
+    # second window with prev model should not be worse on average
+    dcs2 = _window_dcs([55, 20, 10, 8, 4, 2, 1], start=200)
+    w2 = run(dcs2, w, ledger, "4g", cap=160, num_classes=7)
+    assert np.isfinite(w2).all()
+
+
+def test_star_cheaper_than_a2a():
+    dcs = _window_dcs([55, 20, 10, 8, 4, 2, 1])
+    la, ls = Ledger(), Ledger()
+    run_window_a2a(dcs, None, la, "4g", cap=160, num_classes=7)
+    run_window_star(dcs, None, ls, "4g", cap=160, num_classes=7)
+    assert ls.total("learning") < la.total("learning")
+
+
+def test_aggregation_heuristic():
+    dcs = _window_dcs([53, 19, 10, 7, 5, 4, 2])
+    ledger = Ledger()
+    merged = apply_aggregation_heuristic(dcs, ledger, "wifi")
+    thresh = int(np.ceil(2 * MODEL_BYTES / OBS_BYTES))
+    # participants drop (paper: 7 -> ~3-4); data conserved
+    assert len(merged) < len(dcs)
+    assert sum(d.n for d in merged) == sum(d.n for d in dcs)
+    big = [d for d in merged if d.n >= thresh]
+    assert len(big) >= len(merged) - 1
+    assert ledger.total("learning") > 0

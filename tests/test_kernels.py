@@ -1,0 +1,112 @@
+"""Pallas kernel sweeps: shapes x dtypes vs the pure-jnp oracles in ref.py
+(interpret mode on CPU — kernel bodies execute in Python)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import mha_reference, rglru_reference, ssd_reference
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.ssd_scan import ssd_scan
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,H,KV,Sq,Skv,d,causal,window",
+    [
+        (2, 4, 2, 256, 256, 64, True, 0),     # GQA causal
+        (1, 8, 8, 128, 384, 64, True, 0),     # MHA, kv longer (decode-ish)
+        (2, 4, 1, 256, 256, 128, True, 64),   # MQA + sliding window
+        (1, 2, 2, 192, 192, 64, False, 0),    # bidirectional, ragged blocks
+        (1, 4, 4, 64, 64, 32, True, 0),       # small head dim
+    ])
+def test_flash_attention_sweep(B, H, KV, Sq, Skv, d, causal, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, Sq, d), dtype)
+    k = jax.random.normal(ks[1], (B, KV, Skv, d), dtype)
+    v = jax.random.normal(ks[2], (B, KV, Skv, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          interpret=True)
+    ref = mha_reference(q, k, v, causal=causal, window=window)
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                - ref.astype(jnp.float32))))
+    assert err < TOL[dtype], f"err={err}"
+
+
+def test_flash_attention_q_offset_decode():
+    """Decode semantics: 1 query at position T attends to all T+1 keys."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    B, H, d, T = 2, 4, 64, 128
+    q = jax.random.normal(ks[0], (B, H, 1, d))
+    k = jax.random.normal(ks[1], (B, H, T, d))
+    v = jax.random.normal(ks[2], (B, H, T, d))
+    out = flash_attention(q, k, v, causal=True, q_offset=T - 1,
+                          interpret=True)
+    ref = mha_reference(q, k, v, causal=True, q_offset=T - 1)
+    assert float(jnp.max(jnp.abs(out - ref))) < 2e-5
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (2, 256, 4, 64, 32, 64),
+    (1, 128, 2, 32, 64, 128),
+    (2, 512, 8, 64, 128, 128),
+    (1, 256, 1, 128, 16, 32),
+])
+def test_ssd_scan_sweep(B, S, H, P, N, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = (jax.random.normal(ks[3], (B, S, N)) * 0.5).astype(dtype)
+    Cm = (jax.random.normal(ks[4], (B, S, N)) * 0.5).astype(dtype)
+    y, st = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    yr, sr = ssd_reference(x, dt, A, Bm, Cm)
+    scale = float(jnp.max(jnp.abs(yr.astype(jnp.float32)))) + 1e-9
+    err = float(jnp.max(jnp.abs(y.astype(jnp.float32)
+                                - yr.astype(jnp.float32)))) / scale
+    tol = 3e-5 if dtype == jnp.float32 else 5e-2
+    assert err < tol, f"err={err}"
+    sscale = float(jnp.max(jnp.abs(sr.astype(jnp.float32)))) + 1e-9
+    serr = float(jnp.max(jnp.abs(st.astype(jnp.float32)
+                                 - sr.astype(jnp.float32)))) / sscale
+    assert serr < tol, f"state err={serr}"
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,W,chunk,bw", [
+    (2, 256, 256, 64, 128),
+    (1, 128, 128, 128, 128),
+    (3, 512, 384, 128, 128),
+    (1, 64, 512, 32, 256),
+])
+def test_rglru_scan_sweep(B, S, W, chunk, bw, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, W))).astype(dtype)
+    b = (jax.random.normal(ks[1], (B, S, W)) * 0.5).astype(dtype)
+    h = rglru_scan(a, b, chunk=chunk, block_w=bw, interpret=True)
+    hr = rglru_reference(a, b)
+    err = float(jnp.max(jnp.abs(h.astype(jnp.float32)
+                                - hr.astype(jnp.float32))))
+    assert err < (1e-4 if dtype == jnp.float32 else 5e-2), f"err={err}"
+
+
+def test_models_agree_xla_vs_pallas():
+    """End-to-end: loss with attention_impl='pallas' == 'xla' reference."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.data.pipeline import make_lm_batch
+    from repro.models import build_model
+
+    for arch in ["llama3.2-3b", "mamba2-1.3b", "recurrentgemma-9b"]:
+        cfg = get_config(arch).reduced()
+        m_x = build_model(cfg)
+        m_p = build_model(dataclasses.replace(cfg, attention_impl="pallas"))
+        params = m_x.init(jax.random.PRNGKey(0))
+        batch = make_lm_batch(cfg.vocab_size, 2, 128, d_model=cfg.d_model)
+        lx, _ = jax.jit(m_x.loss_fn)(params, batch)
+        lp, _ = jax.jit(m_p.loss_fn)(params, batch)
+        assert abs(float(lx) - float(lp)) < 1e-3, arch

@@ -1,0 +1,73 @@
+"""Input-spec construction + workload-specialised sharding rules."""
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ALL_ARCHS, INPUT_SHAPES, get_config
+from repro.launch.specs import (arch_for_shape, param_rules_for,
+                                shape_supported)
+
+
+class FakeMesh:
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+
+
+MESH = FakeMesh(data=16, model=16)
+
+
+def test_long_500k_support_matrix():
+    runs = {a for a in ALL_ARCHS
+            if shape_supported(get_config(a), INPUT_SHAPES["long_500k"])[0]}
+    assert runs == {"mamba2-1.3b", "recurrentgemma-9b", "llama3.2-3b"}
+    # every skip carries a reason
+    for a in set(ALL_ARCHS) - runs:
+        ok, reason = shape_supported(get_config(a), INPUT_SHAPES["long_500k"])
+        assert not ok and "quadratic" in reason
+
+
+def test_llama_long_context_variant():
+    cfg = arch_for_shape(get_config("llama3.2-3b"), INPUT_SHAPES["long_500k"])
+    assert cfg.sliding_window == 8192
+    # other shapes keep full attention
+    cfg4k = arch_for_shape(get_config("llama3.2-3b"),
+                           INPUT_SHAPES["train_4k"])
+    assert cfg4k.sliding_window == 0
+
+
+def test_all_other_shapes_supported_everywhere():
+    for a in ALL_ARCHS:
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert shape_supported(get_config(a), INPUT_SHAPES[s])[0]
+
+
+def test_decode_rules_weight_stationary():
+    r_train = param_rules_for(MESH, INPUT_SHAPES["train_4k"])
+    r_dec = param_rules_for(MESH, INPUT_SHAPES["decode_32k"])
+    assert r_train["embed"] == "data"          # FSDP for training
+    assert r_dec["embed"] is None              # TP-only for decode
+    assert r_dec["experts"] == ("data", "model")
+    # opt-out restores the paper-faithful baseline
+    r_base = param_rules_for(MESH, INPUT_SHAPES["decode_32k"],
+                             weight_stationary_decode=False)
+    assert r_base["embed"] == "data"
+
+
+def test_vlm_seq_budget_includes_frontend():
+    """VLM total context = image prefix + text; text len is the remainder."""
+    from repro.launch.specs import batch_specs
+    import jax
+    cfg = get_config("llava-next-mistral-7b")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    bs = batch_specs(cfg, INPUT_SHAPES["train_4k"], mesh)
+    n_front = cfg.frontend.num_tokens
+    assert bs["tokens"].shape == (256, 4096 - n_front)
+    assert bs["frontend_embeds"].shape == (256, n_front, cfg.d_model)
+
+
+def test_whisper_batch_includes_encoder():
+    from repro.launch.specs import batch_specs
+    import jax
+    cfg = get_config("whisper-medium")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    bs = batch_specs(cfg, INPUT_SHAPES["prefill_32k"], mesh)
+    assert bs["encoder_embeds"].shape == (32, 1500, 1024)

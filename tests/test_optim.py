@@ -1,0 +1,70 @@
+"""Optimizer: AdamW convergence, gradient clipping properties, schedule."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import OptimizerConfig
+from repro.optim.adamw import (adamw_init, adamw_update, clip_by_global_norm,
+                               global_norm)
+from repro.optim.schedule import cosine_warmup_schedule
+
+
+def test_adamw_minimizes_quadratic():
+    cfg = OptimizerConfig(lr=0.1, weight_decay=0.0, grad_clip=0.0,
+                          warmup_steps=0, total_steps=100, min_lr_ratio=1.0)
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    opt = adamw_init(params)
+    loss = lambda p: jnp.sum((p["w"] - target) ** 2)
+    for i in range(200):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw_update(g, opt, params, 0.1, cfg)
+    assert float(loss(params)) < 1e-3
+
+
+@given(scale=st.floats(min_value=0.01, max_value=1e4))
+@settings(max_examples=30, deadline=None)
+def test_clip_bounds_norm(scale):
+    g = {"a": jnp.ones((4, 4)) * scale, "b": jnp.ones(7) * scale}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(global_norm(clipped)) <= 1.0 + 1e-4
+    if float(norm) <= 1.0:       # no-op when already under the bound
+        for x, y in zip(jax.tree.leaves(g), jax.tree.leaves(clipped)):
+            np.testing.assert_allclose(x, y, rtol=1e-5)
+
+
+def test_weight_decay_skips_vectors():
+    cfg = OptimizerConfig(lr=0.1, weight_decay=1.0, grad_clip=0.0)
+    params = {"mat": jnp.ones((2, 2)), "vec": jnp.ones(2)}
+    opt = adamw_init(params)
+    zero_g = jax.tree.map(jnp.zeros_like, params)
+    new, _, _ = adamw_update(zero_g, opt, params, 0.1, cfg)
+    assert float(jnp.max(jnp.abs(new["vec"] - 1.0))) < 1e-6   # no decay
+    assert float(jnp.max(new["mat"])) < 1.0                    # decayed
+
+
+def test_cosine_schedule_shape():
+    cfg = OptimizerConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                          min_lr_ratio=0.1)
+    lr = cosine_warmup_schedule(cfg)
+    assert float(lr(0)) == pytest.approx(0.0)
+    assert float(lr(10)) == pytest.approx(1e-3, rel=0.02)
+    assert float(lr(5)) == pytest.approx(5e-4, rel=0.02)
+    assert float(lr(100)) == pytest.approx(1e-4, rel=0.05)
+    # monotone decay after warmup
+    vals = [float(lr(s)) for s in range(10, 101, 10)]
+    assert all(a >= b - 1e-12 for a, b in zip(vals, vals[1:]))
+
+
+def test_moments_are_float32():
+    params = {"w": jnp.ones((2, 2), jnp.bfloat16)}
+    opt = adamw_init(params)
+    assert opt.mu["w"].dtype == jnp.float32
+    assert opt.nu["w"].dtype == jnp.float32
+    cfg = OptimizerConfig()
+    g = {"w": jnp.ones((2, 2), jnp.bfloat16)}
+    new, opt2, _ = adamw_update(g, opt, params, 1e-3, cfg)
+    assert new["w"].dtype == jnp.bfloat16       # params keep their dtype
+    assert opt2.mu["w"].dtype == jnp.float32

@@ -1,0 +1,92 @@
+"""Scenario simulation: end-to-end windows, energy decomposition, Zipf
+allocation, and the paper's qualitative orderings at reduced scale."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scenario import (ScenarioConfig, _zipf_probs, run_scenario)
+from repro.data.synthetic_covtype import make_covtype_like
+
+DATA = make_covtype_like(seed=0)
+BASE = ScenarioConfig(windows=12, eval_every=4)
+
+
+def test_edge_only():
+    r = run_scenario(dataclasses.replace(BASE, algo="edge_only"), DATA)
+    assert len(r.f1_curve) == 3
+    assert r.f1_curve[-1] > 0.55
+    assert r.energy_learning == 0.0
+    # NB-IoT collection: 12 windows x 100 obs x 433B
+    assert r.energy_collection == pytest.approx(34477 * 12 / 100, rel=0.01)
+
+
+@pytest.mark.parametrize("algo", ["star", "a2a"])
+def test_htl_scenarios_run(algo):
+    r = run_scenario(dataclasses.replace(BASE, algo=algo), DATA)
+    assert np.isfinite(r.f1_curve).all()
+    assert r.f1_curve[-1] > 0.3
+    assert r.energy_collection > 0 and r.energy_learning > 0
+    assert r.energy_total == pytest.approx(
+        r.energy_collection + r.energy_learning)
+
+
+def test_htl_saves_energy_vs_edge_only():
+    edge = run_scenario(dataclasses.replace(BASE, algo="edge_only"), DATA)
+    star = run_scenario(dataclasses.replace(BASE, algo="star", tech="wifi"),
+                        DATA)
+    saving = 1 - star.energy_total / edge.energy_total
+    assert saving > 0.9          # paper headline: up to 94%
+
+
+def test_partial_edge_energy_ordering():
+    """More data shipped to the edge -> more collection energy (Table 2)."""
+    energies = []
+    for frac in (0.5, 0.15, 0.03):
+        r = run_scenario(dataclasses.replace(BASE, algo="star",
+                                             p_edge=frac), DATA)
+        energies.append(r.energy_collection)
+    assert energies[0] > energies[1] > energies[2]
+
+
+def test_aggregation_reduces_participants_not_data():
+    r = run_scenario(dataclasses.replace(BASE, algo="star", aggregate=True),
+                     DATA)
+    assert np.isfinite(r.f1_curve).all()
+
+
+def test_subsample_runs():
+    r = run_scenario(dataclasses.replace(BASE, algo="star", n_subsample=2),
+                     DATA)
+    assert np.isfinite(r.f1_curve).all()
+
+
+def test_uniform_distribution_runs():
+    r = run_scenario(dataclasses.replace(BASE, algo="a2a", uniform=True),
+                     DATA)
+    assert np.isfinite(r.f1_curve).all()
+
+
+def test_deterministic_given_seed():
+    r1 = run_scenario(dataclasses.replace(BASE, algo="star", seed=3), DATA)
+    r2 = run_scenario(dataclasses.replace(BASE, algo="star", seed=3), DATA)
+    assert r1.f1_curve == r2.f1_curve
+    assert r1.energy_total == pytest.approx(r2.energy_total)
+
+
+# ---------------------------------------------------------------------------
+@given(n=st.integers(min_value=1, max_value=50),
+       alpha=st.floats(min_value=0.1, max_value=3.0))
+@settings(max_examples=50, deadline=None)
+def test_zipf_probs(n, alpha):
+    p = _zipf_probs(n, alpha)
+    assert p.shape == (n,)
+    assert p.sum() == pytest.approx(1.0)
+    assert (np.diff(p) <= 1e-12).all()         # decreasing in rank
+
+
+def test_zipf_unbalance_matches_paper():
+    """alpha=1.5, N=7: top mule holds ~53-55%% of the data (paper Sec. 6.3)."""
+    p = _zipf_probs(7, 1.5)
+    assert 0.5 < p[0] < 0.58

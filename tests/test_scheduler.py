@@ -1,0 +1,76 @@
+"""Continuous-batching scheduler: per-slot positions, splicing, and
+equivalence with sequential generation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import make_lm_batch
+from repro.models import build_model
+from repro.serving import ServeEngine
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "mamba2-1.3b"])
+def test_matches_sequential_generation(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    # requests with DIFFERENT prompt lengths -> different decode depths
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int64)
+               for n in (24, 16, 31, 9)]
+    n_new = 5
+
+    batcher = ContinuousBatcher(model, params, slots=2, max_len=64)
+    reqs = [Request(i, p, n_new) for i, p in enumerate(prompts)]
+    for r in reqs:
+        batcher.submit(r)
+    batcher.run()
+    assert all(r.done for r in reqs)
+
+    # reference: one-at-a-time greedy generation
+    eng = ServeEngine(model, params, max_new_tokens=n_new)
+    for r, p in zip(reqs, prompts):
+        ref = np.asarray(eng.generate(
+            {"tokens": jnp.asarray(p[None, :], jnp.int32)}))[0]
+        assert r.out[:n_new] == ref.tolist(), (r.rid, r.out, ref.tolist())
+
+
+def test_per_sequence_positions_decode():
+    """Vector pos: two sequences at different depths in one batched decode
+    must match their scalar-pos decodes."""
+    from repro.serving import pad_cache
+    cfg = get_config("llama3.2-3b").reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(1))
+    toks = make_lm_batch(cfg.vocab_size, 2, 32, seed=7,
+                         d_model=cfg.d_model)["tokens"]
+
+    # scalar-pos references (each row alone)
+    refs = []
+    lens = [32, 20]
+    caches = []
+    for i, n in enumerate(lens):
+        lg, cache = jax.jit(m.prefill)(params, {"tokens": toks[i:i+1, :n]})
+        cache = pad_cache(m, cache, 40 - n, 1, n)
+        lg2, _ = jax.jit(m.decode_step)(
+            params, cache, jnp.argmax(lg, -1)[:, None].astype(jnp.int32),
+            jnp.asarray(n, jnp.int32))
+        refs.append(np.asarray(lg2)[0])
+        caches.append(cache)
+
+    # batched with per-sequence positions
+    batched = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=1),
+                           caches[0], caches[1])
+    lg0, _ = jax.jit(m.prefill)(params, {"tokens": toks[0:1, :lens[0]]})
+    lg1, _ = jax.jit(m.prefill)(params, {"tokens": toks[1:2, :lens[1]]})
+    tok = jnp.concatenate([jnp.argmax(lg0, -1), jnp.argmax(lg1, -1)]
+                          )[:, None].astype(jnp.int32)
+    lgb, _ = jax.jit(m.decode_step)(params, batched, tok,
+                                    jnp.asarray(lens, jnp.int32))
+    out = np.asarray(lgb)
+    np.testing.assert_allclose(out[0], refs[0], atol=2e-3)
+    np.testing.assert_allclose(out[1], refs[1], atol=2e-3)

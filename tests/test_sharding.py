@@ -1,0 +1,115 @@
+"""Partitioning rules: divisibility fallback, axis dedup, template plumbing —
+with hypothesis property tests over random shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.models import build_model
+from repro.sharding.partitioning import (DEFAULT_RULES, ParamSpec,
+                                         init_params, logical_to_pspec,
+                                         param_pspecs, param_shape_structs,
+                                         template_bytes)
+
+
+class FakeMesh:
+    """Stand-in with just .shape (logical_to_pspec only uses that)."""
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+
+
+MESH = FakeMesh(data=16, model=16)
+MESH3 = FakeMesh(pod=2, data=16, model=16)
+
+
+def test_divisible_dims_shard():
+    spec = logical_to_pspec(("embed", "mlp"), (4096, 8192), MESH,
+                            DEFAULT_RULES)
+    assert spec == P("data", "model")
+
+
+def test_non_divisible_replicates():
+    # 24 heads % 16 -> replicated
+    spec = logical_to_pspec(("embed", "heads", "head_dim"), (3072, 24, 128),
+                            MESH, DEFAULT_RULES)
+    assert spec == P("data")
+
+
+def test_axis_never_reused():
+    # batch takes 'data'; cache_len wants 'model'; kv_heads would want
+    # 'model' too but it's taken -> replicated
+    rules = dict(DEFAULT_RULES)
+    spec = logical_to_pspec(("batch", "cache_len", "kv_heads", None),
+                            (128, 32768, 16, 128), MESH, rules)
+    assert spec == P("data", "model")
+
+
+def test_batch_multi_pod():
+    from repro.sharding.partitioning import MULTIPOD_RULES
+    spec = logical_to_pspec(("batch", None), (256, 4096), MESH3,
+                            MULTIPOD_RULES)
+    assert spec == P(("pod", "data"))
+
+
+@given(dim=st.integers(min_value=1, max_value=10**6))
+@settings(max_examples=100, deadline=None)
+def test_sharded_dims_always_divisible(dim):
+    spec = logical_to_pspec(("mlp",), (dim,), MESH, DEFAULT_RULES)
+    if spec and spec[0] is not None:
+        assert dim % MESH.shape["model"] == 0
+
+
+@given(shape=st.lists(st.sampled_from([1, 2, 7, 16, 24, 128, 256, 4096]),
+                      min_size=1, max_size=4),
+       axes=st.lists(st.sampled_from(
+           [None, "batch", "embed", "heads", "mlp", "vocab", "experts"]),
+           min_size=1, max_size=4))
+@settings(max_examples=100, deadline=None)
+def test_pspec_properties(shape, axes):
+    n = min(len(shape), len(axes))
+    shape, axes = tuple(shape[:n]), tuple(axes[:n])
+    spec = logical_to_pspec(axes, shape, MESH, DEFAULT_RULES)
+    # no mesh axis used twice
+    used = [a for a in spec if a is not None]
+    flat = []
+    for a in used:
+        flat.extend(a if isinstance(a, tuple) else (a,))
+    assert len(flat) == len(set(flat))
+    # every sharded dim is divisible
+    for dim, a in zip(shape, tuple(spec) + (None,) * 4):
+        if a is not None:
+            sz = np.prod([MESH.shape[x] for x in
+                          (a if isinstance(a, tuple) else (a,))])
+            assert dim % sz == 0
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_template_consistency(arch):
+    """Template <-> pspecs <-> shape-structs are structurally consistent and
+    the template's byte count matches actual initialized params."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    t = model.template()
+    specs = param_pspecs(t, MESH, DEFAULT_RULES)
+    structs = param_shape_structs(t, jnp.dtype(cfg.dtype))
+    assert jax.tree.structure(specs, is_leaf=lambda x: isinstance(x, P)) \
+        .num_leaves == jax.tree.structure(structs).num_leaves
+    params = model.init(jax.random.PRNGKey(0))
+    tb = template_bytes(t, jnp.dtype("float32"))
+    pb = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+    assert tb == pb
+
+
+def test_init_deterministic():
+    cfg = get_config("llama3.2-3b").reduced()
+    m = build_model(cfg)
+    p1 = m.init(jax.random.PRNGKey(7))
+    p2 = m.init(jax.random.PRNGKey(7))
+    assert all(bool(jnp.array_equal(a, b)) for a, b in
+               zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    p3 = m.init(jax.random.PRNGKey(8))
+    assert any(not bool(jnp.array_equal(a, b)) for a, b in
+               zip(jax.tree.leaves(p1), jax.tree.leaves(p3)))

@@ -1,0 +1,39 @@
+"""Static validator + ZeRO-1 spec densification."""
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.specs import _densify_spec
+from repro.launch.validate import validate
+
+
+class FakeMesh:
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+
+
+def test_densify_fills_free_axes():
+    mesh = FakeMesh(data=16, model=16)
+    # (L, D, H, hd): D on data, H replicated (24 % 16), hd divisible
+    spec = _densify_spec(P(None, "data", None, None), (28, 3072, 24, 128),
+                         mesh)
+    assert spec == P(None, "data", None, "model")
+
+
+def test_densify_no_free_axes():
+    mesh = FakeMesh(data=16, model=16)
+    spec = _densify_spec(P(None, "data", "model"), (28, 3072, 8192), mesh)
+    assert spec == P(None, "data", "model")
+
+
+def test_validator_deepseek_train_exceeds_hbm():
+    r = validate("deepseek-v3-671b", "train_4k")
+    assert not r["fits_16gb"]               # documented: needs >1 pod
+    r2 = validate("deepseek-v3-671b", "decode_32k")
+    assert r2["fits_16gb"]                  # EP-256 + MLA latent cache fits
+
+
+def test_validator_all_decodes_fit():
+    from repro.configs import ALL_ARCHS
+    for a in ALL_ARCHS:
+        r = validate(a, "decode_32k")
+        if r["status"] == "ok":
+            assert r["fits_16gb"], (a, r)
