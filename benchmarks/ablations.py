@@ -82,9 +82,11 @@ def prev_model_source_ablation(data, windows, seeds=2):
         try:
             f1s = []
             for s in range(seeds):
+                # _greedy_refine is a loop-engine internal; pin that engine
                 r = run_scenario(ScenarioConfig(
                     algo="star", tech="wifi", windows=windows,
-                    eval_every=max(1, windows // 10), seed=s), data)
+                    eval_every=max(1, windows // 10), seed=s,
+                    engine="loop"), data)
                 f1s.append(r.converged_f1())
             out[label] = round(float(np.mean(f1s)), 4)
         finally:

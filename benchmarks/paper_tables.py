@@ -7,13 +7,14 @@ and seeds for CI-speed smoke validation.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import time
 
 import numpy as np
 
-from repro.core.scenario import ScenarioConfig, ScenarioResult, run_scenario
+from repro.core.scenario import ScenarioConfig, run_sweep
 from repro.data.synthetic_covtype import make_covtype_like
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
@@ -21,35 +22,31 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
 
 
 def _avg(cfgs, data, n_seeds):
-    """Run a scenario over seeds; average converged F1 and energies."""
-    f1s, etot, ecol, elearn = [], [], [], []
-    curves = []
-    for s in range(n_seeds):
-        import dataclasses
-        r = run_scenario(dataclasses.replace(cfgs, seed=s), data)
-        f1s.append(r.converged_f1())
-        etot.append(r.energy_total)
-        ecol.append(r.energy_collection)
-        elearn.append(r.energy_learning)
-        curves.append(r.f1_curve)
+    """Sweep a scenario over seeds; average converged F1 and energies."""
+    results = run_sweep([dataclasses.replace(cfgs, seed=s)
+                         for s in range(n_seeds)], data)
+    curves = [r.f1_curve for r in results]
     return {
-        "f1": float(np.mean(f1s)), "f1_std": float(np.std(f1s)),
-        "energy_mj": float(np.mean(etot)),
-        "collection_mj": float(np.mean(ecol)),
-        "learning_mj": float(np.mean(elearn)),
+        "f1": float(np.mean([r.converged_f1() for r in results])),
+        "f1_std": float(np.std([r.converged_f1() for r in results])),
+        "energy_mj": float(np.mean([r.energy_total for r in results])),
+        "collection_mj": float(np.mean([r.energy_collection
+                                        for r in results])),
+        "learning_mj": float(np.mean([r.energy_learning for r in results])),
         "f1_curve": list(np.mean(np.array(curves), axis=0)),
     }
 
 
-def run_all(windows: int = 100, n_seeds: int = 3, quick: bool = False):
+def run_all(windows: int = 100, n_seeds: int = 3, quick: bool = False,
+            engine: str = "fleet"):
     if quick:
         windows, n_seeds = 30, 1
     data = make_covtype_like(seed=0)
-    out = {"windows": windows, "n_seeds": n_seeds}
+    out = {"windows": windows, "n_seeds": n_seeds, "engine": engine}
 
-    base = ScenarioConfig(windows=windows, eval_every=max(1, windows // 20))
+    base = ScenarioConfig(windows=windows, eval_every=max(1, windows // 20),
+                          engine=engine)
 
-    import dataclasses
     t0 = time.time()
 
     # -- Figure 2 / benchmark: all data on the edge server ------------------

@@ -8,6 +8,7 @@ written to results/benchmarks/*.json.
 from __future__ import annotations
 
 import argparse
+import functools
 import json
 import os
 import sys
@@ -18,10 +19,10 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
-def bench_paper_tables(quick: bool):
+def bench_paper_tables(quick: bool, engine: str = "fleet"):
     from benchmarks.paper_tables import run_all
     t0 = time.time()
-    out = run_all(quick=quick)
+    out = run_all(quick=quick, engine=engine)
     dt = (time.time() - t0) * 1e6
     rows = []
     ref = out["fig2_edge_only"]
@@ -82,6 +83,57 @@ def bench_kernels(quick: bool):
     return rows
 
 
+def bench_fleet_engine(quick: bool):
+    """Fleet vs loop engine: warm per-scenario wall-clock and per-window
+    jitted dispatch counts (the fleet engine is O(1) per window)."""
+    import dataclasses
+
+    from repro.core import fleet, htl
+    from repro.core.scenario import ScenarioConfig, run_sweep
+    from repro.data.synthetic_covtype import make_covtype_like
+
+    data = make_covtype_like(seed=0)
+    windows = 6 if quick else 20
+    rows = []
+    for algo in ("star", "a2a"):
+        base = ScenarioConfig(windows=windows, eval_every=windows, algo=algo,
+                              tech="wifi")
+        times = {}
+        for engine in ("loop", "fleet"):
+            cfgs = [dataclasses.replace(base, engine=engine, seed=s)
+                    for s in (1, 2)]
+            run_sweep(cfgs, data)       # warm the jit cache on these seeds
+            t0 = time.time()
+            run_sweep(cfgs, data)
+            times[engine] = (time.time() - t0) / 2 * 1e6
+        # dispatch count per window: loop pays one train + (a2a) one refine
+        # per DC; fleet pays one of each per window regardless of fleet size
+        counts = {"loop": 0, "fleet": 0}
+        orig_train, orig_fleet = htl.train_svm, fleet.train_svm_fleet
+
+        def count_loop(*a, **k):
+            counts["loop"] += 1
+            return orig_train(*a, **k)
+
+        def count_fleet(*a, **k):
+            counts["fleet"] += 1
+            return orig_fleet(*a, **k)
+
+        try:
+            htl.train_svm, fleet.train_svm_fleet = count_loop, count_fleet
+            run_sweep([dataclasses.replace(base, engine="loop", seed=3),
+                       dataclasses.replace(base, engine="fleet", seed=3)],
+                      data)
+        finally:
+            htl.train_svm, fleet.train_svm_fleet = orig_train, orig_fleet
+        rows.append((f"scenario_{algo}_fleet", times["fleet"],
+                     f"loop_us={times['loop']:.0f} "
+                     f"speedup={times['loop'] / times['fleet']:.2f}x "
+                     f"train_dispatches_loop={counts['loop']} "
+                     f"fleet={counts['fleet']} ({windows} windows)"))
+    return rows
+
+
 def bench_htl_trainer(quick: bool):
     """Paper's technique at LM scale: DCN traffic vs sync baseline."""
     import dataclasses
@@ -129,18 +181,23 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--skip-tables", action="store_true")
+    ap.add_argument("--engine", default="fleet", choices=("fleet", "loop"),
+                    help="scenario learning-round engine for the tables")
     args, _ = ap.parse_known_args()
 
     print("name,us_per_call,derived")
-    sections = [bench_kernels, bench_htl_trainer, bench_dryrun_summary]
+    sections = [bench_fleet_engine, bench_kernels, bench_htl_trainer,
+                bench_dryrun_summary]
     if not args.skip_tables:
-        sections.insert(0, bench_paper_tables)
+        sections.insert(
+            0, functools.partial(bench_paper_tables, engine=args.engine))
     for fn in sections:
         try:
             for name, us, derived in fn(args.quick):
                 print(f"{name},{us:.1f},{derived}")
         except Exception as e:              # noqa: BLE001
-            print(f"{fn.__name__},0,ERROR:{e}")
+            print(f"{getattr(fn, '__name__', 'bench_paper_tables')},0,"
+                  f"ERROR:{e}")
             raise
 
 

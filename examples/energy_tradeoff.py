@@ -3,39 +3,45 @@ how much data reaches the edge server, which radio links the mules use, and
 the HTL variant. Prints a small ASCII table (the analogue of paper Fig. 3 +
 Tables 2-4).
 
+The whole grid goes through one :func:`repro.core.scenario.run_sweep` call,
+so every configuration after the first reuses the batched fleet engine's
+jitted executables.
+
     PYTHONPATH=src python examples/energy_tradeoff.py --windows 30
 """
 import argparse
 import dataclasses
 
-from repro.core.scenario import ScenarioConfig, run_scenario
+from repro.core.scenario import ScenarioConfig, run_sweep
 from repro.data.synthetic_covtype import make_covtype_like
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--windows", type=int, default=30)
+    ap.add_argument("--engine", default="fleet", choices=("fleet", "loop"))
     args = ap.parse_args()
     data = make_covtype_like(seed=0)
-    base = ScenarioConfig(windows=args.windows,
+    base = ScenarioConfig(windows=args.windows, engine=args.engine,
                           eval_every=max(1, args.windows // 5))
 
-    edge = run_scenario(dataclasses.replace(base, algo="edge_only"), data)
-    rows = [("edge-only (NB-IoT)", edge)]
+    grid = [("edge-only (NB-IoT)", dataclasses.replace(base,
+                                                       algo="edge_only"))]
     for pe in (0.5, 0.15, 0.03):
-        rows.append((f"star 4g, {int(pe * 100)}% on edge",
-                     run_scenario(dataclasses.replace(
-                         base, algo="star", p_edge=pe), data)))
+        grid.append((f"star 4g, {int(pe * 100)}% on edge",
+                     dataclasses.replace(base, algo="star", p_edge=pe)))
     for algo in ("a2a", "star"):
         for tech in ("4g", "wifi"):
-            rows.append((f"{algo} {tech}, 0% on edge",
-                         run_scenario(dataclasses.replace(
-                             base, algo=algo, tech=tech), data)))
-            rows.append((f"{algo} {tech} + aggregation",
-                         run_scenario(dataclasses.replace(
-                             base, algo=algo, tech=tech, aggregate=True),
-                             data)))
+            grid.append((f"{algo} {tech}, 0% on edge",
+                         dataclasses.replace(base, algo=algo, tech=tech)))
+            grid.append((f"{algo} {tech} + aggregation",
+                         dataclasses.replace(base, algo=algo, tech=tech,
+                                             aggregate=True)))
 
+    results = run_sweep([cfg for _, cfg in grid], data)
+    rows = list(zip((name for name, _ in grid), results))
+
+    edge = rows[0][1]
     e0, f0 = edge.energy_total, edge.converged_f1()
     print(f"{'configuration':28s} {'energy mJ':>10s} {'saving':>7s} "
           f"{'F1':>6s} {'loss':>6s}")

@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 verification: full test suite + benchmark smoke.
+# Usage: scripts/verify.sh [--fast]   (--fast deselects @slow tests)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+MARK=()
+if [[ "${1:-}" == "--fast" ]]; then
+    MARK=(-m "not slow")
+fi
+
+python -m pytest -x -q "${MARK[@]}"
+python -m benchmarks.run --quick --skip-tables

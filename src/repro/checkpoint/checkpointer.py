@@ -33,12 +33,12 @@ def _path_str(path) -> str:
 def save_checkpoint(ckpt_dir: str, tree: Any, step: int = 0,
                     pspecs: Any = None) -> None:
     os.makedirs(ckpt_dir, exist_ok=True)
-    leaves = jax.tree.flatten_with_path(tree)[0]
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
     arrays = {}
     index = {"step": step, "leaves": []}
     spec_leaves = None
     if pspecs is not None:
-        spec_leaves = [s for _, s in jax.tree.flatten_with_path(
+        spec_leaves = [s for _, s in jax.tree_util.tree_flatten_with_path(
             pspecs, is_leaf=lambda x: x is None or not isinstance(x, (dict, list, tuple))
         )[0]]
     for i, (path, leaf) in enumerate(leaves):
@@ -59,7 +59,7 @@ def load_checkpoint(ckpt_dir: str, like: Any) -> Any:
     with open(os.path.join(ckpt_dir, "index.msgpack"), "rb") as f:
         index = msgpack.unpackb(f.read())
     npz = np.load(os.path.join(ckpt_dir, "arrays.npz"))
-    paths, treedef = jax.tree.flatten_with_path(like)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     out = []
     for path, leaf in paths:
         key = _path_str(path)

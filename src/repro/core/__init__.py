@@ -4,8 +4,15 @@ transfer trainer (`htl_trainer`, the TPU-native adaptation — DESIGN.md §3).
 """
 from repro.core.energy import Ledger, TECHS, MODEL_BYTES, OBS_BYTES  # noqa: F401
 from repro.core.htl import DC, run_window_a2a, run_window_star  # noqa: F401
+from repro.core.topology import (  # noqa: F401
+    Node,
+    Topology,
+    TRANSPORTS,
+    transfer_counts,
+)
 from repro.core.scenario import (  # noqa: F401
     ScenarioConfig,
     ScenarioResult,
     run_scenario,
+    run_sweep,
 )

@@ -5,7 +5,9 @@ logical transfer is recorded in an event ledger, split by purpose
 (collection vs learning), so the per-table breakdowns (paper Tables 2-6) come
 straight out of the ledger.
 
-Accounting conventions (the paper leaves these implicit; see DESIGN.md §2):
+Accounting conventions (the paper leaves these implicit; see DESIGN.md §2 —
+the per-technology relay/mains-power rules are implemented once, in
+:mod:`repro.core.topology`):
 
 * Only battery-powered endpoints are counted. The edge server is mains
   powered: transfers to it count the device's tx only; transfers *from* it
@@ -80,13 +82,17 @@ class Ledger:
     def unicast(self, tech: str, nbytes: float, *, src_is_es=False,
                 dst_is_es=False, src_is_ap=False, dst_is_ap=False,
                 purpose="learning", what="model") -> float:
-        """One unicast between Data Collectors under the conventions above."""
-        if tech == "wifi" and not (src_is_es or dst_is_es):
-            hops = 1 if (src_is_ap or dst_is_ap) else 2
-            return self.add("wifi", nbytes, purpose=purpose,
-                            n_tx=hops, n_rx=hops, what=what)
-        n_tx = 0 if src_is_es else 1
-        n_rx = 0 if dst_is_es else 1
+        """One unicast between Data Collectors.
+
+        Flag-based convenience wrapper: the per-technology relay/mains-power
+        rules live in :mod:`repro.core.topology` (the single source of
+        truth); algorithm code should charge against a
+        :class:`~repro.core.topology.Topology` directly.
+        """
+        from repro.core.topology import Node, transfer_counts
+        n_tx, n_rx = transfer_counts(
+            tech, Node("src", is_es=src_is_es, is_ap=src_is_ap),
+            Node("dst", is_es=dst_is_es, is_ap=dst_is_ap))
         return self.add(tech, nbytes, purpose=purpose, n_tx=n_tx, n_rx=n_rx,
                         what=what)
 

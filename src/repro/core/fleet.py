@@ -1,0 +1,141 @@
+"""Batched fleet-round engine: one window = O(1) jitted dispatches.
+
+The loop engine in :mod:`repro.core.htl` issues one ``train_svm`` and (for
+A2AHTL) one ``greedytl`` dispatch *per Data Collector*, so a sweep over many
+scenario configurations (paper Tables 2-6) pays thousands of tiny dispatches
+and host syncs. This engine pads the per-window DC fleet to a bucketed
+capacity and runs
+
+* base training as a single :func:`~repro.core.svm.train_svm_fleet`
+  (``vmap`` over the DC axis), and
+* the A2AHTL refine step as a single
+  :func:`~repro.core.greedytl.greedytl_fleet` against the shared source pool,
+
+so dispatch count per window is constant and shapes are stable across
+windows (Poisson-varying fleet sizes land in the same bucket — no
+recompiles). Energy is charged through the same
+:class:`~repro.core.topology.Topology` patterns as the loop engine, so
+ledger totals match exactly; model updates match numerically — the refine
+step maps the exact per-call computation graph over the fleet (bitwise),
+base training is vmapped (equal to low-order bits) — so F1 curves agree
+within 1e-4 (tests/test_fleet_engine.py).
+
+Election/subsampling policies are resolved through the :mod:`~repro.core.
+htl` module at call time, so policy ablations that monkey-patch the loop
+engine (benchmarks/ablations.py) apply to this engine too.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import htl
+from repro.core.energy import INDEX_BYTES, Ledger, MODEL_BYTES
+from repro.core.greedytl import greedytl_fleet
+from repro.core.htl import DC, build_source_pool
+from repro.core.svm import pad_fleet, train_svm_fleet
+from repro.core.topology import Topology, fleet_nodes
+
+FLEET_BUCKETS = (4, 8, 16)   # padded DC-axis capacities (cover Poisson(7))
+
+
+def fleet_cap(n_dcs: int) -> int:
+    """Bucketed DC-axis capacity: Poisson-varying fleet sizes land on a
+    handful of stable shapes (powers of two beyond the largest bucket), so
+    the jit cache stays tiny and padding waste stays below ~2x."""
+    for b in FLEET_BUCKETS:
+        if n_dcs <= b:
+            return b
+    return 1 << (n_dcs - 1).bit_length()
+
+
+def _train_base_fleet(dcs: List[DC], cap: int, num_classes: int
+                      ) -> np.ndarray:
+    """Base SVMs for the whole fleet in ONE dispatch. Returns (L, F+1, C)."""
+    x, y, m, _ = pad_fleet([d.x for d in dcs], [d.y for d in dcs],
+                           cap, fleet_cap(len(dcs)))
+    w = train_svm_fleet(jnp.asarray(x), jnp.asarray(y), jnp.asarray(m),
+                        num_classes=num_classes)
+    return np.asarray(w)[:len(dcs)]
+
+
+def run_window_a2a(dcs: List[DC], prev_global: Optional[np.ndarray],
+                   ledger: Ledger, tech: str, *, cap: int, num_classes: int,
+                   n_subsample: Optional[int] = None,
+                   rng: Optional[np.random.Generator] = None) -> np.ndarray:
+    """One A2AHTL round (Algorithm 1), batched. Returns the new global
+    model. Drop-in replacement for :func:`repro.core.htl.run_window_a2a`."""
+    rng = rng or np.random.default_rng(0)
+    dcs = [d for d in dcs if d.n > 0]
+    if not dcs:
+        return prev_global
+    ap = htl._ap_name(dcs)
+
+    base = _train_base_fleet(dcs, cap, num_classes)
+    if len(dcs) == 1:
+        only = base[0]
+        return only if prev_global is None else 0.5 * (only + prev_global)
+    topo = Topology(ledger, tech, fleet_nodes(dcs, ap))
+
+    # Step 1: every DC sends its base model to every other DC
+    topo.exchange_all(MODEL_BYTES, what="m0 exchange")
+
+    # Step 2: GreedyTL at every DC against the shared source pool — one
+    # vmapped dispatch for the whole fleet
+    src, src_mask = build_source_pool(list(base), prev_global)
+    sub = [htl._subsample(d, n_subsample, num_classes, rng)
+           for d in dcs]
+    x, y, m, _ = pad_fleet([d.x for d in sub], [d.y for d in sub],
+                           cap, fleet_cap(len(dcs)))
+    refined, _ = greedytl_fleet(jnp.asarray(x), jnp.asarray(y),
+                                jnp.asarray(m), jnp.asarray(src),
+                                jnp.asarray(src_mask),
+                                num_classes=num_classes)
+    refined = np.asarray(refined)[:len(dcs)]
+
+    # Step 3: send refined models to one DC (the AP / largest mule)
+    center = next((d for d in dcs if d.name == ap), dcs[0])
+    topo.gather(topo.node(center.name), MODEL_BYTES, what="m1 gather")
+
+    # Step 4: average
+    return np.mean(refined, axis=0)
+
+
+def run_window_star(dcs: List[DC], prev_global: Optional[np.ndarray],
+                    ledger: Ledger, tech: str, *, cap: int, num_classes: int,
+                    n_subsample: Optional[int] = None,
+                    rng: Optional[np.random.Generator] = None) -> np.ndarray:
+    """One StarHTL round (Algorithm 2), batched base training. Drop-in
+    replacement for :func:`repro.core.htl.run_window_star`."""
+    rng = rng or np.random.default_rng(0)
+    dcs = [d for d in dcs if d.n > 0]
+    if not dcs:
+        return prev_global
+    ap = htl._ap_name(dcs)
+
+    base = _train_base_fleet(dcs, cap, num_classes)
+    if len(dcs) == 1:
+        only = base[0]
+        return only if prev_global is None else 0.5 * (only + prev_global)
+    topo = Topology(ledger, tech, fleet_nodes(dcs, ap))
+
+    # Step 1: entropy index exchange + center id broadcast (tiny messages)
+    topo.exchange_all(INDEX_BYTES, what="entropy index")
+    c_idx = int(np.argmax([htl.label_entropy(d.y, num_classes)
+                           for d in dcs]))
+    center = dcs[c_idx]
+    topo.broadcast(topo.node(center.name), INDEX_BYTES, what="center id")
+
+    # Step 2: base models to the center only
+    topo.gather(topo.node(center.name), MODEL_BYTES, what="m0 to center")
+
+    # Step 3: GreedyTL at the center only (one dispatch, batch of one)
+    src, src_mask = build_source_pool(list(base), prev_global)
+    c_sub = htl._subsample(center, n_subsample, num_classes, rng)
+    x, y, m, _ = pad_fleet([c_sub.x], [c_sub.y], cap, 1)
+    w, _ = greedytl_fleet(jnp.asarray(x), jnp.asarray(y), jnp.asarray(m),
+                          jnp.asarray(src), jnp.asarray(src_mask),
+                          num_classes=num_classes)
+    return np.asarray(w)[0]

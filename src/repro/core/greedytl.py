@@ -56,18 +56,28 @@ def _loo_ridge(A, y, rmask, cmask, lam):
     return jnp.sum(loo ** 2), v
 
 
-@partial(jax.jit, static_argnames=("num_classes", "k_max"))
-def greedytl(x, y, mask, src_w, src_mask, *, num_classes: int,
-             lam_src: float = 0.1, lam_x: float = 10.0,
-             lam_bias: float = 2.0, k_max: int = 16, lam: float = None):
-    """Greedy source combination + gated local correction (see module doc).
+def _loo_ridge_gram(AtA, Aty, A_rm, y, rmask, cmask, lam_d):
+    """Column-masked ridge + LOO error from a PRECOMPUTED Gram system.
 
-    x: (n, F) padded local data; y: (n,); mask: (n,) row validity.
-    src_w: (M, F+1, C) stacked source hypotheses; src_mask: (M,).
-    Returns (w_eff (F+1, C), selected (M,) 0/1 source-selection mask).
+    Mathematically identical to :func:`_loo_ridge` (the column mask is 0/1,
+    so masking the Gram matrix equals the Gram of the masked matrix), but
+    the O(R D^2) products ``A^T A`` and ``A^T y`` are shared across the
+    hundreds of greedy-selection trials instead of rebuilt per trial.
     """
-    if lam is not None:           # backwards-compatible alias
-        lam_src = lam
+    cm2 = cmask[:, None] * cmask[None, :]
+    G = AtA * cm2 + jnp.diag(lam_d)
+    Ginv = jnp.linalg.inv(G)
+    v = (Ginv @ (Aty * cmask)) * cmask
+    resid = (A_rm @ v - y) * rmask
+    h = jnp.sum((A_rm @ (Ginv * cm2)) * A_rm, axis=-1)
+    loo = resid / jnp.maximum(1.0 - h, 0.1)
+    return jnp.sum(loo ** 2), v
+
+
+def _greedytl(x, y, mask, src_w, src_mask, *, num_classes: int,
+              lam_src: float = 0.1, lam_x: float = 10.0,
+              lam_bias: float = 2.0, k_max: int = 16):
+    """Unjitted GreedyTL core — also the map target of the fleet refiner."""
     n, F = x.shape
     M, _, C = src_w.shape
     xm = x * mask[:, None]
@@ -90,13 +100,26 @@ def greedytl(x, y, mask, src_w, src_mask, *, num_classes: int,
     lam_vec = jnp.concatenate([jnp.full((M,), lam_src),
                                jnp.full((C,), lam_bias)])
 
-    def greedy_step(state, _):
-        sel, best, done = state
+    # Gram system shared by every trial of every greedy step
+    A_rm = A * rmask[:, None]
+    AtA = A_rm.T @ A_rm
+    Aty = A_rm.T @ (yr * rmask)
+    lam_d = jnp.broadcast_to(lam_vec, (A.shape[1],)) + 1e-4
+
+    def _loo(cm):
+        return _loo_ridge_gram(AtA, Aty, A_rm, yr, rmask, cm, lam_d)
+
+    def cond(state):
+        k, sel, best, done = state
+        return (~done) & (k < min(k_max, M))
+
+    def body(state):
+        k, sel, best, done = state
 
         def trial(j):
             cand = jnp.where(jnp.arange(M) == j, 1.0, sel) * src_mask
             cm = jnp.concatenate([cand, jnp.ones(C)])
-            obj, _ = _loo_ridge(A, yr, rmask, cm, lam_vec)
+            obj, _ = _loo(cm)
             invalid = (sel[j] > 0) | (src_mask[j] == 0)
             return jnp.where(invalid, jnp.inf, obj)
 
@@ -105,16 +128,18 @@ def greedytl(x, y, mask, src_w, src_mask, *, num_classes: int,
         improved = (objs[j] < best) & ~done
         sel = jnp.where(improved, jnp.where(jnp.arange(M) == j, 1.0, sel),
                         sel)
-        return (sel, jnp.where(improved, objs[j], best),
-                done | ~improved), None
+        return (k + 1, sel, jnp.where(improved, objs[j], best),
+                done | ~improved)
 
-    obj0, _ = _loo_ridge(A, yr, rmask, bias_cols, lam_vec)
-    (sel, _, _), _ = jax.lax.scan(
-        greedy_step, (jnp.zeros(M), obj0, jnp.asarray(False)), None,
-        length=min(k_max, M))
+    obj0, _ = _loo(bias_cols)
+    # Early-exit greedy selection: once no trial improves, further steps are
+    # provable no-ops, so a while_loop saves the (typically ~4x) dead steps
+    # a fixed-length scan would still execute.
+    _, sel, _, _ = jax.lax.while_loop(
+        cond, body, (0, jnp.zeros(M), obj0, jnp.asarray(False)))
 
     cm = jnp.concatenate([sel * src_mask, jnp.ones(C)])
-    _, v1 = _loo_ridge(A, yr, rmask, cm, lam_vec)
+    _, v1 = _loo(cm)
     alpha = v1[:M] / s                                   # undo normalisation
     bias1 = v1[M:]                                       # (C,)
 
@@ -136,3 +161,45 @@ def greedytl(x, y, mask, src_w, src_mask, *, num_classes: int,
 
     w_eff = w_src_part.at[:F].add(Vx)
     return w_eff, sel
+
+
+@partial(jax.jit, static_argnames=("num_classes", "k_max"))
+def greedytl(x, y, mask, src_w, src_mask, *, num_classes: int,
+             lam_src: float = 0.1, lam_x: float = 10.0,
+             lam_bias: float = 2.0, k_max: int = 16, lam: float = None):
+    """Greedy source combination + gated local correction (see module doc).
+
+    x: (n, F) padded local data; y: (n,); mask: (n,) row validity.
+    src_w: (M, F+1, C) stacked source hypotheses; src_mask: (M,).
+    Returns (w_eff (F+1, C), selected (M,) 0/1 source-selection mask).
+    """
+    if lam is not None:           # backwards-compatible alias
+        lam_src = lam
+    return _greedytl(x, y, mask, src_w, src_mask, num_classes=num_classes,
+                     lam_src=lam_src, lam_x=lam_x, lam_bias=lam_bias,
+                     k_max=k_max)
+
+
+@partial(jax.jit, static_argnames=("num_classes", "k_max"))
+def greedytl_fleet(x, y, mask, src_w, src_mask, *, num_classes: int,
+                   lam_src: float = 0.1, lam_x: float = 10.0,
+                   lam_bias: float = 2.0, k_max: int = 16):
+    """GreedyTL at every DC of a padded fleet — ONE dispatch per window.
+
+    x: (L, cap, F); y: (L, cap); mask: (L, cap). The source pool
+    src_w (M, F+1, C) / src_mask (M,) is SHARED across the fleet (paper
+    Algorithm 1: every DC refines against the same m(0) exchange).
+    Returns (w_eff (L, F+1, C), selected (L, M)).
+
+    Uses ``lax.map`` rather than ``vmap``: each DC's slice then runs the
+    exact per-call computation graph, so the result is bitwise identical to
+    L separate :func:`greedytl` calls (the loop engine) — vmap's batched
+    linalg is not — while still costing a single dispatch. Padding DCs
+    (all-zero masks) leave the greedy while_loop after one step, so they
+    are nearly free.
+    """
+    return jax.lax.map(
+        lambda t: _greedytl(t[0], t[1], t[2], src_w, src_mask,
+                            num_classes=num_classes, lam_src=lam_src,
+                            lam_x=lam_x, lam_bias=lam_bias, k_max=k_max),
+        (x, y, mask))

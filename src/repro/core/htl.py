@@ -5,9 +5,14 @@ A2AHTL: local SVM -> all-to-all model exchange -> GreedyTL at every DC ->
 gather refined models at one DC -> average. StarHTL: local SVM -> entropy
 based center election -> models to the center only -> GreedyTL at the center.
 
-All model transfers, index exchanges and raw-data aggregations are charged to
-the :class:`~repro.core.energy.Ledger` under the technology conventions in
-``energy.py``.
+All model transfers, index exchanges and raw-data aggregations are charged
+through the :class:`~repro.core.topology.Topology` message patterns (unicast /
+broadcast / gather / exchange_all), which encode the per-technology relay and
+mains-power conventions once for every engine.
+
+This module is the *loop* reference engine: one jitted dispatch per DC. The
+batched O(1)-dispatch engine in :mod:`repro.core.fleet` must stay numerically
+on top of it (see tests/test_fleet_engine.py).
 """
 from __future__ import annotations
 
@@ -21,6 +26,7 @@ import numpy as np
 from repro.core.energy import INDEX_BYTES, Ledger, MODEL_BYTES, OBS_BYTES
 from repro.core.greedytl import greedytl
 from repro.core.svm import pad_local, train_svm
+from repro.core.topology import Topology, fleet_nodes
 
 M_CAP = 16        # max source hypotheses per GreedyTL call (padded, masked)
 
@@ -72,13 +78,7 @@ def _subsample(dc: DC, n_per_class: Optional[int], num_classes: int,
 def _greedy_refine(dc: DC, sources: List[np.ndarray], cap: int,
                    num_classes: int) -> np.ndarray:
     x, y, m = pad_local(dc.x, dc.y, cap)
-    M = len(sources)
-    F = x.shape[1]
-    src = np.zeros((M_CAP, F + 1, num_classes), np.float32)
-    src_mask = np.zeros((M_CAP,), np.float32)
-    for i, w in enumerate(sources[:M_CAP]):
-        src[i] = w
-        src_mask[i] = 1.0
+    src, src_mask = build_source_pool(sources, None)
     w_eff, _ = greedytl(jnp.asarray(x), jnp.asarray(y), jnp.asarray(m),
                         jnp.asarray(src), jnp.asarray(src_mask),
                         num_classes=num_classes)
@@ -98,14 +98,12 @@ def apply_aggregation_heuristic(dcs: List[DC], ledger: Ledger, tech: str
     small.sort(key=lambda d: -d.n)
     sink = small[0]
     xs, ys = [sink.x], [sink.y]
-    ap = max((d for d in dcs if not d.is_es), key=lambda d: d.n, default=None)
+    topo = Topology(ledger, tech, fleet_nodes(dcs, _ap_name(dcs)))
     for d in small[1:]:
         if d.n == 0:
             continue
-        ledger.unicast(tech, d.n * OBS_BYTES, purpose="learning",
-                       src_is_ap=(ap is not None and d.name == ap.name),
-                       dst_is_ap=(ap is not None and sink.name == ap.name),
-                       what="raw-data aggregation")
+        topo.unicast(topo.node(d.name), topo.node(sink.name),
+                     d.n * OBS_BYTES, what="raw-data aggregation")
         xs.append(d.x)
         ys.append(d.y)
     merged = DC(sink.name, np.concatenate(xs), np.concatenate(ys))
@@ -117,6 +115,24 @@ def _ap_name(dcs: List[DC]) -> Optional[str]:
     if not mules:
         return None
     return max(mules, key=lambda d: d.n).name
+
+
+def build_source_pool(base: List[np.ndarray],
+                      prev_global: Optional[np.ndarray]):
+    """The shared GreedyTL source pool of a window: every base model plus the
+    previous global model, truncated to M_CAP. Returns padded
+    (src (M_CAP, F+1, C), src_mask (M_CAP,)) — shared by both engines."""
+    sources = list(base)
+    if prev_global is not None:
+        sources = sources + [prev_global]
+    sources = sources[:M_CAP]
+    F1, C = sources[0].shape
+    src = np.zeros((M_CAP, F1, C), np.float32)
+    src_mask = np.zeros((M_CAP,), np.float32)
+    for i, w in enumerate(sources):
+        src[i] = w
+        src_mask[i] = 1.0
+    return src, src_mask
 
 
 def run_window_a2a(dcs: List[DC], prev_global: Optional[np.ndarray],
@@ -134,34 +150,21 @@ def run_window_a2a(dcs: List[DC], prev_global: Optional[np.ndarray],
     if len(dcs) == 1:
         only = base[dcs[0].name]
         return only if prev_global is None else 0.5 * (only + prev_global)
+    topo = Topology(ledger, tech, fleet_nodes(dcs, ap))
 
     # Step 1: every DC sends its base model to every other DC
-    for src in dcs:
-        for dst in dcs:
-            if src.name == dst.name:
-                continue
-            ledger.unicast(tech, MODEL_BYTES, src_is_es=src.is_es,
-                           dst_is_es=dst.is_es, src_is_ap=src.name == ap,
-                           dst_is_ap=dst.name == ap, what="m0 exchange")
+    topo.exchange_all(MODEL_BYTES, what="m0 exchange")
 
-    # Step 2: GreedyTL at every DC (prev global model joins the source pool)
-    refined = []
-    for d in dcs:
-        sources = [base[o.name] for o in dcs]
-        if prev_global is not None:
-            sources = sources + [prev_global]
-        refined.append(_greedy_refine(_subsample(d, n_subsample, num_classes,
-                                                 rng),
-                                      sources, cap, num_classes))
+    # Step 2: GreedyTL at every DC (prev global model joins the shared pool)
+    sources = [base[o.name] for o in dcs]
+    if prev_global is not None:
+        sources = sources + [prev_global]
+    refined = [_greedy_refine(_subsample(d, n_subsample, num_classes, rng),
+                              sources, cap, num_classes) for d in dcs]
 
     # Step 3: send refined models to one DC (the AP / largest mule)
     center = next((d for d in dcs if d.name == ap), dcs[0])
-    for d in dcs:
-        if d.name == center.name:
-            continue
-        ledger.unicast(tech, MODEL_BYTES, src_is_es=d.is_es,
-                       dst_is_es=center.is_es, src_is_ap=d.name == ap,
-                       dst_is_ap=center.name == ap, what="m1 gather")
+    topo.gather(topo.node(center.name), MODEL_BYTES, what="m1 gather")
 
     # Step 4: average
     return np.mean(np.stack(refined), axis=0)
@@ -182,30 +185,15 @@ def run_window_star(dcs: List[DC], prev_global: Optional[np.ndarray],
     if len(dcs) == 1:
         only = base[dcs[0].name]
         return only if prev_global is None else 0.5 * (only + prev_global)
+    topo = Topology(ledger, tech, fleet_nodes(dcs, ap))
 
     # Step 1: entropy index exchange + center id broadcast (tiny messages)
-    for src in dcs:
-        for dst in dcs:
-            if src.name == dst.name:
-                continue
-            ledger.unicast(tech, INDEX_BYTES, src_is_es=src.is_es,
-                           dst_is_es=dst.is_es, src_is_ap=src.name == ap,
-                           dst_is_ap=dst.name == ap, what="entropy index")
+    topo.exchange_all(INDEX_BYTES, what="entropy index")
     center = max(dcs, key=lambda d: label_entropy(d.y, num_classes))
-    for dst in dcs:
-        if dst.name == center.name:
-            continue
-        ledger.unicast(tech, INDEX_BYTES, src_is_es=center.is_es,
-                       dst_is_es=dst.is_es, src_is_ap=center.name == ap,
-                       dst_is_ap=dst.name == ap, what="center id")
+    topo.broadcast(topo.node(center.name), INDEX_BYTES, what="center id")
 
     # Step 2: base models to the center only
-    for d in dcs:
-        if d.name == center.name:
-            continue
-        ledger.unicast(tech, MODEL_BYTES, src_is_es=d.is_es,
-                       dst_is_es=center.is_es, src_is_ap=d.name == ap,
-                       dst_is_ap=center.name == ap, what="m0 to center")
+    topo.gather(topo.node(center.name), MODEL_BYTES, what="m0 to center")
 
     # Step 3: GreedyTL at the center only
     sources = [base[d.name] for d in dcs]

@@ -7,21 +7,43 @@ mules per window is Poisson(lambda); the per-mule allocation follows a Zipf
 ranking (or uniform, Scenario 3). After each window a learning round runs
 (centralised on the ES, or A2AHTL/StarHTL among the Data Collectors) and the
 global model is evaluated on the held-out test set.
+
+The per-window pipeline is decomposed into composable phases —
+
+    collection policy -> learning round -> global EMA update -> eval
+
+— each a module-level function, so alternative policies (engines,
+topologies, collection schemes) compose without touching the driver. The
+learning round runs on one of two engines: ``"fleet"`` (default,
+O(1) jitted dispatches per window, :mod:`repro.core.fleet`) or ``"loop"``
+(the per-DC reference, :mod:`repro.core.htl`); they are numerically
+interchangeable (tests/test_fleet_engine.py).
+
+:func:`run_sweep` evaluates many configurations while sharing the jitted
+fleet trainers across them — the core workload of the paper's Tables 2-6.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import fleet as fleet_engine
+from repro.core import htl as loop_engine
 from repro.core.energy import Ledger
-from repro.core.htl import (DC, apply_aggregation_heuristic, run_window_a2a,
-                            run_window_star)
+from repro.core.htl import DC, apply_aggregation_heuristic
 from repro.core.metrics import f_measure
 from repro.core.svm import pad_local, svm_predict, train_svm
 from repro.data.synthetic_covtype import Dataset, NUM_CLASSES
+
+ENGINES = {
+    "fleet": {"a2a": fleet_engine.run_window_a2a,
+              "star": fleet_engine.run_window_star},
+    "loop": {"a2a": loop_engine.run_window_a2a,
+             "star": loop_engine.run_window_star},
+}
 
 
 @dataclass(frozen=True)
@@ -40,6 +62,7 @@ class ScenarioConfig:
     cap: int = 160                # padded local-dataset capacity
     eval_every: int = 1
     seed: int = 0
+    engine: str = "fleet"         # 'fleet' (batched) | 'loop' (reference)
     # "This model is used to update the model elaborated until the previous
     # time slot" (paper Section 3): the window model updates the global model
     # incrementally. We use an exponential moving average with this rate.
@@ -80,7 +103,102 @@ def _zipf_probs(n: int, alpha: float) -> np.ndarray:
     return p / p.sum()
 
 
+# ---------------------------------------------------------------------------
+# per-window phases
+# ---------------------------------------------------------------------------
+
+def collect_window(cfg: ScenarioConfig, rng: np.random.Generator,
+                   wx: np.ndarray, wy: np.ndarray, ledger: Ledger
+                   ) -> List[DC]:
+    """Collection policy: split the window's observations between the Edge
+    Server (NB-IoT, fraction ``p_edge``) and a Poisson fleet of SmartMules
+    (802.15.4, Zipf- or uniformly-allocated), charging every transfer."""
+    n_edge = int(round(cfg.p_edge * cfg.obs_per_window))
+    idx = rng.permutation(cfg.obs_per_window)
+    edge_idx, mule_idx = idx[:n_edge], idx[n_edge:]
+
+    L = max(1, rng.poisson(cfg.lam_poisson))
+    if cfg.uniform:
+        assign = rng.integers(0, L, size=len(mule_idx))
+    else:
+        assign = rng.choice(L, size=len(mule_idx),
+                            p=_zipf_probs(L, cfg.zipf_alpha))
+
+    dcs: List[DC] = []
+    for m in range(L):
+        sel = mule_idx[assign == m]
+        if len(sel) == 0:
+            continue
+        ledger.collect_to_mule(len(sel))
+        dcs.append(DC(f"SM{m + 1}", wx[sel], wy[sel]))
+    if n_edge > 0:
+        ledger.collect_to_edge(n_edge)
+        if cfg.include_es_in_learning:
+            dcs.append(DC("ES", wx[edge_idx], wy[edge_idx], is_es=True))
+    return dcs
+
+
+def learning_round(cfg: ScenarioConfig, dcs: List[DC],
+                   prev_global: Optional[np.ndarray], ledger: Ledger,
+                   rng: np.random.Generator) -> Optional[np.ndarray]:
+    """One HTL round on the configured engine (after the optional
+    data-aggregation heuristic, paper Section 6.3)."""
+    if cfg.aggregate:
+        dcs = apply_aggregation_heuristic(dcs, ledger, cfg.tech)
+    run = ENGINES[cfg.engine][cfg.algo]
+    return run(dcs, prev_global, ledger, cfg.tech, cap=cfg.cap,
+               num_classes=NUM_CLASSES, n_subsample=cfg.n_subsample, rng=rng)
+
+
+def update_global(cfg: ScenarioConfig, prev: Optional[np.ndarray],
+                  new: Optional[np.ndarray]) -> Optional[np.ndarray]:
+    """Paper Section 3: the window model updates the global model via EMA."""
+    if prev is None or new is None:
+        return new if new is not None else prev
+    eta = cfg.global_update_rate
+    return (1.0 - eta) * prev + eta * new
+
+
+def _eval(w: np.ndarray, data: Dataset) -> float:
+    pred = np.asarray(svm_predict(jnp.asarray(w),
+                                  jnp.asarray(data.x_test.astype(np.float32))))
+    return f_measure(data.y_test, pred, NUM_CLASSES)
+
+
+# ---------------------------------------------------------------------------
+# drivers
+# ---------------------------------------------------------------------------
+
+def _run_edge_only(cfg: ScenarioConfig, data: Dataset, ledger: Ledger,
+                   stream_x: np.ndarray, stream_y: np.ndarray
+                   ) -> ScenarioResult:
+    """Edge-only benchmark: the ES accumulates everything and retrains."""
+    n_total = cfg.windows * cfg.obs_per_window
+    f1_curve: List[float] = []
+    xacc = np.zeros((n_total, stream_x.shape[1]), np.float32)
+    yacc = np.zeros((n_total,), np.int32)
+    macc = np.zeros((n_total,), np.float32)
+    w = None
+    for t in range(cfg.windows):
+        s = slice(t * cfg.obs_per_window, (t + 1) * cfg.obs_per_window)
+        ledger.collect_to_edge(cfg.obs_per_window)
+        xacc[s] = stream_x[s]
+        yacc[s] = stream_y[s]
+        macc[s] = 1.0
+        w = train_svm(jnp.asarray(xacc), jnp.asarray(yacc),
+                      jnp.asarray(macc), num_classes=NUM_CLASSES,
+                      iters=300,
+                      w0=None if w is None else jnp.asarray(w))
+        w = np.asarray(w)
+        if (t + 1) % cfg.eval_every == 0:
+            f1_curve.append(_eval(w, data))
+    return ScenarioResult(f1_curve, ledger, cfg)
+
+
 def run_scenario(cfg: ScenarioConfig, data: Dataset) -> ScenarioResult:
+    if cfg.engine not in ENGINES:
+        raise KeyError(f"unknown engine {cfg.engine!r}; "
+                       f"pick one of {sorted(ENGINES)}")
     rng = np.random.default_rng(cfg.seed)
     ledger = Ledger()
     n_total = cfg.windows * cfg.obs_per_window
@@ -88,76 +206,30 @@ def run_scenario(cfg: ScenarioConfig, data: Dataset) -> ScenarioResult:
     stream_x = data.x_train[order].astype(np.float32)
     stream_y = data.y_train[order].astype(np.int32)
 
+    if cfg.algo == "edge_only":
+        return _run_edge_only(cfg, data, ledger, stream_x, stream_y)
+
     f1_curve: List[float] = []
     prev_global: Optional[np.ndarray] = None
-
-    # Edge-only: the ES accumulates everything and retrains each window
-    if cfg.algo == "edge_only":
-        xacc = np.zeros((n_total, stream_x.shape[1]), np.float32)
-        yacc = np.zeros((n_total,), np.int32)
-        macc = np.zeros((n_total,), np.float32)
-        w = None
-        for t in range(cfg.windows):
-            s = slice(t * cfg.obs_per_window, (t + 1) * cfg.obs_per_window)
-            ledger.collect_to_edge(cfg.obs_per_window)
-            xacc[s] = stream_x[s]
-            yacc[s] = stream_y[s]
-            macc[s] = 1.0
-            w = train_svm(jnp.asarray(xacc), jnp.asarray(yacc),
-                          jnp.asarray(macc), num_classes=NUM_CLASSES,
-                          iters=300,
-                          w0=None if w is None else jnp.asarray(w))
-            w = np.asarray(w)
-            if (t + 1) % cfg.eval_every == 0:
-                f1_curve.append(_eval(w, data))
-        return ScenarioResult(f1_curve, ledger, cfg)
-
     for t in range(cfg.windows):
         s = slice(t * cfg.obs_per_window, (t + 1) * cfg.obs_per_window)
-        wx, wy = stream_x[s], stream_y[s]
-
-        n_edge = int(round(cfg.p_edge * cfg.obs_per_window))
-        idx = rng.permutation(cfg.obs_per_window)
-        edge_idx, mule_idx = idx[:n_edge], idx[n_edge:]
-
-        L = max(1, rng.poisson(cfg.lam_poisson))
-        if cfg.uniform:
-            assign = rng.integers(0, L, size=len(mule_idx))
-        else:
-            assign = rng.choice(L, size=len(mule_idx),
-                                p=_zipf_probs(L, cfg.zipf_alpha))
-
-        dcs: List[DC] = []
-        for m in range(L):
-            sel = mule_idx[assign == m]
-            if len(sel) == 0:
-                continue
-            ledger.collect_to_mule(len(sel))
-            dcs.append(DC(f"SM{m + 1}", wx[sel], wy[sel]))
-        if n_edge > 0:
-            ledger.collect_to_edge(n_edge)
-            if cfg.include_es_in_learning:
-                dcs.append(DC("ES", wx[edge_idx], wy[edge_idx], is_es=True))
-
-        if cfg.aggregate:
-            dcs = apply_aggregation_heuristic(dcs, ledger, cfg.tech)
-
-        run = run_window_a2a if cfg.algo == "a2a" else run_window_star
-        new_global = run(dcs, prev_global, ledger, cfg.tech,
-                         cap=cfg.cap, num_classes=NUM_CLASSES,
-                         n_subsample=cfg.n_subsample, rng=rng)
-        if prev_global is None or new_global is None:
-            prev_global = new_global if new_global is not None else prev_global
-        else:
-            eta = cfg.global_update_rate
-            prev_global = (1.0 - eta) * prev_global + eta * new_global
+        dcs = collect_window(cfg, rng, stream_x[s], stream_y[s], ledger)
+        new_global = learning_round(cfg, dcs, prev_global, ledger, rng)
+        prev_global = update_global(cfg, prev_global, new_global)
         if (t + 1) % cfg.eval_every == 0:
             f1_curve.append(_eval(prev_global, data))
 
     return ScenarioResult(f1_curve, ledger, cfg)
 
 
-def _eval(w: np.ndarray, data: Dataset) -> float:
-    pred = np.asarray(svm_predict(jnp.asarray(w),
-                                  jnp.asarray(data.x_test.astype(np.float32))))
-    return f_measure(data.y_test, pred, NUM_CLASSES)
+def run_sweep(configs: Sequence[ScenarioConfig], data: Dataset
+              ) -> List[ScenarioResult]:
+    """Evaluate many scenario configurations over the same dataset.
+
+    The batched fleet trainers are shape-stable (padded sample capacity,
+    bucketed DC capacity), so every configuration after the first reuses the
+    same jitted executables — the sweep pays compilation once, which is what
+    makes the paper's algorithm x technology x p_edge x aggregation grids
+    (Tables 2-6) cheap to extend.
+    """
+    return [run_scenario(cfg, data) for cfg in configs]

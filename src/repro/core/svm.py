@@ -32,14 +32,10 @@ def _hinge_loss(w, x, y_onehot_pm, mask, lam):
     return jnp.sum(per_sample) / denom + lam * jnp.sum(w[:-1] ** 2)
 
 
-@partial(jax.jit, static_argnames=("num_classes", "iters"))
-def train_svm(x: jax.Array, y: jax.Array, mask: jax.Array, *,
-              num_classes: int, lam: float = 1e-3, lr: float = 0.5,
-              iters: int = 200, w0: jax.Array = None) -> jax.Array:
-    """x: (n,F) padded; y: (n,) int labels; mask: (n,) {0,1}.
-
-    Returns w: (F+1, C). Momentum GD with cosine-decayed lr; warm start w0.
-    """
+def _train_svm(x: jax.Array, y: jax.Array, mask: jax.Array, *,
+               num_classes: int, lam: float = 1e-3, lr: float = 0.5,
+               iters: int = 200, w0: jax.Array = None) -> jax.Array:
+    """Unjitted trainer core — also the vmap target of the fleet trainer."""
     n, F = x.shape
     y_pm = 2.0 * jax.nn.one_hot(y, num_classes) - 1.0
     w_init = jnp.zeros((F + 1, num_classes)) if w0 is None else w0
@@ -54,6 +50,52 @@ def train_svm(x: jax.Array, y: jax.Array, mask: jax.Array, *,
 
     w, _ = jax.lax.fori_loop(0, iters, body, (w_init, jnp.zeros_like(w_init)))
     return w
+
+
+@partial(jax.jit, static_argnames=("num_classes", "iters"))
+def train_svm(x: jax.Array, y: jax.Array, mask: jax.Array, *,
+              num_classes: int, lam: float = 1e-3, lr: float = 0.5,
+              iters: int = 200, w0: jax.Array = None) -> jax.Array:
+    """x: (n,F) padded; y: (n,) int labels; mask: (n,) {0,1}.
+
+    Returns w: (F+1, C). Momentum GD with cosine-decayed lr; warm start w0.
+    """
+    return _train_svm(x, y, mask, num_classes=num_classes, lam=lam, lr=lr,
+                      iters=iters, w0=w0)
+
+
+@partial(jax.jit, static_argnames=("num_classes", "iters"))
+def train_svm_fleet(x: jax.Array, y: jax.Array, mask: jax.Array, *,
+                    num_classes: int, lam: float = 1e-3, lr: float = 0.5,
+                    iters: int = 200) -> jax.Array:
+    """Batched base training over a padded DC fleet — ONE dispatch per window.
+
+    x: (L, cap, F); y: (L, cap); mask: (L, cap) row validity (an all-zero
+    mask row is a padding DC and trains to a harmless zero-ish model).
+    Returns w: (L, F+1, C).
+    """
+    return jax.vmap(
+        lambda xi, yi, mi: _train_svm(xi, yi, mi, num_classes=num_classes,
+                                      lam=lam, lr=lr, iters=iters)
+    )(x, y, mask)
+
+
+def pad_fleet(xs, ys, cap: int, fleet_cap: int
+              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Pad a list of local datasets to a (fleet_cap, cap, F) fleet block.
+
+    Returns (x, y, mask, dc_mask) where dc_mask (fleet_cap,) marks real DCs.
+    """
+    assert len(xs) <= fleet_cap
+    F = xs[0].shape[1]
+    x = np.zeros((fleet_cap, cap, F), np.float32)
+    y = np.zeros((fleet_cap, cap), np.int32)
+    m = np.zeros((fleet_cap, cap), np.float32)
+    dcm = np.zeros((fleet_cap,), np.float32)
+    for i, (xi, yi) in enumerate(zip(xs, ys)):
+        x[i], y[i], m[i] = pad_local(xi, yi, cap)
+        dcm[i] = 1.0
+    return x, y, m, dcm
 
 
 def pad_local(x: np.ndarray, y: np.ndarray, cap: int

@@ -452,8 +452,9 @@ def moe_ffn_shard_map(p, x, cfg: ModelConfig):
         aux = m.router_aux_coef * E * jnp.sum(f * jnp.mean(probs, axis=0))
         return y, aux
 
-    fn = jax.shard_map(
-        local, mesh=mesh, axis_names=frozenset({"model"}), check_vma=False,
+    from jax.experimental.shard_map import shard_map
+    fn = shard_map(
+        local, mesh=mesh, check_rep=False,
         in_specs=(P_("model"), P_("model"), P_("model"), P_(), P_()),
         out_specs=(P_(), P_()))
     y, aux = fn(p["wi"], p["wg"], p["wo"], p["router"],

@@ -19,7 +19,7 @@ from repro.sharding.partitioning import ParamSpec
 def _cache_len_axes(model: Model, batch: int, seq_len: int) -> dict:
     """Map cache leaf path -> axis index of 'cache_len' (or None)."""
     t = model.cache_template(batch, seq_len)
-    flat, _ = jax.tree.flatten_with_path(
+    flat, _ = jax.tree_util.tree_flatten_with_path(
         t, is_leaf=lambda x: isinstance(x, ParamSpec))
     out = {}
     for path, spec in flat:
@@ -52,7 +52,7 @@ def pad_cache(model: Model, cache, n_extra: int, batch: int, seq_len: int):
         pad_widths[ax] = (0, n_extra)
         return jnp.pad(leaf, pad_widths)
 
-    flat, treedef = jax.tree.flatten_with_path(cache)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
     return jax.tree.unflatten(treedef, [pad(p, l) for p, l in flat])
 
 

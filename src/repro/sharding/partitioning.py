@@ -226,7 +226,7 @@ def _init_leaf(key, spec: ParamSpec, default_dtype) -> jax.Array:
 
 def init_params(template, key: jax.Array, default_dtype=jnp.float32):
     """Materialize a param tree from a template, one folded key per leaf path."""
-    leaves, treedef = jax.tree.flatten_with_path(
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(
         template, is_leaf=lambda x: isinstance(x, ParamSpec))
     out = []
     for i, (path, spec) in enumerate(leaves):

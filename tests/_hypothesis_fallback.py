@@ -1,0 +1,106 @@
+"""Deterministic fallback for ``hypothesis`` when it is not installed.
+
+The tier-1 suite uses a handful of hypothesis property tests. This shim
+implements just the surface those tests touch (``given``, ``settings`` and
+the ``integers``/``floats``/``sampled_from``/``lists``/``tuples``
+strategies) with a fixed-seed PRNG, so the property tests still exercise a
+spread of inputs — boundary values first, then seeded random draws — and the
+suite collects and passes without the dependency. When ``hypothesis`` IS
+installed, the test modules import the real thing and this file is unused.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from types import SimpleNamespace
+from typing import Any, Callable, List
+
+_DEFAULT_MAX_EXAMPLES = 20
+_SEED = 0xC0FFEE
+
+
+class _Strategy:
+    """A strategy = (draw fn, optional boundary examples tried first)."""
+
+    def __init__(self, draw: Callable[[random.Random], Any],
+                 boundary: List[Any] = ()):  # noqa: B006 - read-only default
+        self._draw = draw
+        self.boundary = list(boundary)
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+def integers(min_value: int = 0, max_value: int = 2 ** 31 - 1) -> _Strategy:
+    return _Strategy(lambda r: r.randint(min_value, max_value),
+                     boundary=[min_value, max_value])
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0,
+           **_kw) -> _Strategy:
+    return _Strategy(lambda r: r.uniform(min_value, max_value),
+                     boundary=[min_value, max_value])
+
+
+def sampled_from(seq) -> _Strategy:
+    seq = list(seq)
+    return _Strategy(lambda r: seq[r.randrange(len(seq))],
+                     boundary=seq[:1])
+
+
+def lists(elem: _Strategy, min_size: int = 0, max_size: int = 10,
+          **_kw) -> _Strategy:
+    def draw(r: random.Random):
+        n = r.randint(min_size, max_size)
+        return [elem.draw(r) for _ in range(n)]
+    boundary = [[elem.draw(random.Random(_SEED)) for _ in range(min_size)]]
+    return _Strategy(draw, boundary=boundary)
+
+
+def tuples(*elems: _Strategy) -> _Strategy:
+    return _Strategy(lambda r: tuple(e.draw(r) for e in elems))
+
+
+strategies = SimpleNamespace(integers=integers, floats=floats,
+                             sampled_from=sampled_from, lists=lists,
+                             tuples=tuples)
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_kw):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats: _Strategy):
+    """Run the test over boundary examples first, then seeded random draws."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def runner(*args, **kwargs):
+            n = getattr(runner, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            rng = random.Random(_SEED)
+            names = sorted(strats)
+            n_boundary = max(len(strats[k].boundary) for k in names)
+            for i in range(min(n, n_boundary)):
+                drawn = {k: (strats[k].boundary[i]
+                             if i < len(strats[k].boundary)
+                             else strats[k].draw(rng)) for k in names}
+                fn(*args, **drawn, **kwargs)
+            for _ in range(max(0, n - n_boundary)):
+                drawn = {k: strats[k].draw(rng) for k in names}
+                fn(*args, **drawn, **kwargs)
+
+        # pytest must not see the drawn parameters (it would treat them as
+        # fixtures): hide the wrapped signature, keep only non-strategy params
+        del runner.__wrapped__
+        params = [p for name, p in
+                  inspect.signature(fn).parameters.items()
+                  if name not in strats]
+        runner.__signature__ = inspect.Signature(params)
+        return runner
+    return deco

@@ -2,7 +2,10 @@
 headline numbers, and hypothesis property tests on the ledger."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # deterministic shim, tests/_hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.energy import Ledger, MODEL_BYTES, OBS_BYTES, TECHS
 

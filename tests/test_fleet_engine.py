@@ -1,0 +1,153 @@
+"""Batched fleet engine vs loop reference engine: numerical parity, exact
+ledger totals, O(1) dispatch count, and the topology layer's conventions."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import fleet, htl
+from repro.core.energy import Ledger, MODEL_BYTES, TECHS
+from repro.core.scenario import ScenarioConfig, run_scenario, run_sweep
+from repro.core.topology import (Node, Topology, fleet_nodes,
+                                 transfer_counts)
+from repro.data.synthetic_covtype import make_covtype_like
+
+DATA = make_covtype_like(seed=0)
+BASE = ScenarioConfig(windows=6, eval_every=2)
+
+PARITY_CONFIGS = [
+    ("star", dataclasses.replace(BASE, algo="star", tech="4g")),
+    ("a2a", dataclasses.replace(BASE, algo="a2a", tech="wifi")),
+    ("star_agg", dataclasses.replace(BASE, algo="star", tech="wifi",
+                                     aggregate=True)),
+    ("a2a_agg", dataclasses.replace(BASE, algo="a2a", tech="4g",
+                                    aggregate=True, p_edge=0.15)),
+    ("a2a_sub", dataclasses.replace(BASE, algo="a2a", tech="wifi",
+                                    n_subsample=5)),
+]
+
+
+@pytest.mark.parametrize("label,cfg", PARITY_CONFIGS,
+                         ids=[c[0] for c in PARITY_CONFIGS])
+def test_engine_parity(label, cfg):
+    """The batched engine must reproduce the loop engine's F1 curve
+    (atol <= 1e-4) and its ledger totals exactly."""
+    r_loop = run_scenario(dataclasses.replace(cfg, engine="loop"), DATA)
+    r_fleet = run_scenario(dataclasses.replace(cfg, engine="fleet"), DATA)
+    np.testing.assert_allclose(r_fleet.f1_curve, r_loop.f1_curve, atol=1e-4)
+    assert r_fleet.ledger.by_tech() == r_loop.ledger.by_tech()
+    assert r_fleet.ledger.by_purpose() == r_loop.ledger.by_purpose()
+
+
+def test_run_sweep_matches_run_scenario():
+    cfgs = [dataclasses.replace(BASE, algo=a, seed=s)
+            for a in ("star", "a2a") for s in (0, 1)]
+    swept = run_sweep(cfgs, DATA)
+    for cfg, r in zip(cfgs, swept):
+        single = run_scenario(cfg, DATA)
+        assert r.f1_curve == single.f1_curve
+        assert r.energy_total == single.energy_total
+
+
+def test_fleet_dispatch_count_is_o1_per_window():
+    """Loop engine trains once per DC; fleet engine once per window."""
+    counts = {"loop": 0, "fleet": 0}
+    orig_train, orig_fleet = htl.train_svm, fleet.train_svm_fleet
+
+    def count_loop(*a, **k):
+        counts["loop"] += 1
+        return orig_train(*a, **k)
+
+    def count_fleet(*a, **k):
+        counts["fleet"] += 1
+        return orig_fleet(*a, **k)
+
+    cfg = dataclasses.replace(BASE, algo="a2a", windows=4, eval_every=4)
+    try:
+        htl.train_svm, fleet.train_svm_fleet = count_loop, count_fleet
+        run_scenario(dataclasses.replace(cfg, engine="loop"), DATA)
+        loop_calls = counts["loop"]
+        run_scenario(dataclasses.replace(cfg, engine="fleet"), DATA)
+        fleet_calls = counts["fleet"]
+    finally:
+        htl.train_svm, fleet.train_svm_fleet = orig_train, orig_fleet
+    assert fleet_calls == 4                 # exactly one per window
+    assert loop_calls > fleet_calls         # one per DC (Poisson(7) fleet)
+
+
+def test_fleet_cap_buckets():
+    assert fleet.fleet_cap(1) == 4
+    assert fleet.fleet_cap(4) == 4
+    assert fleet.fleet_cap(5) == 8
+    assert fleet.fleet_cap(16) == 16
+    assert fleet.fleet_cap(17) == 32
+    assert fleet.fleet_cap(40) == 64
+
+
+# ---------------------------------------------------------------------------
+# topology layer
+# ---------------------------------------------------------------------------
+
+def test_transfer_counts_conventions():
+    mule, mule2 = Node("SM1"), Node("SM2")
+    ap = Node("SM3", is_ap=True)
+    es = Node("ES", is_es=True)
+    # infrastructure techs: 1 tx + 1 rx; ES side free
+    assert transfer_counts("4g", mule, mule2) == (1, 1)
+    assert transfer_counts("4g", mule, es) == (1, 0)
+    assert transfer_counts("4g", es, mule) == (0, 1)
+    # wifi star: non-AP pairs relay through the AP
+    assert transfer_counts("wifi", mule, mule2) == (2, 2)
+    assert transfer_counts("wifi", mule, ap) == (1, 1)
+    assert transfer_counts("wifi", ap, mule) == (1, 1)
+    assert transfer_counts("wifi", mule, es) == (1, 0)
+
+
+def test_ledger_unicast_delegates_to_transports():
+    """The legacy flag API and the typed topology API must charge alike."""
+    l1, l2 = Ledger(), Ledger()
+    topo = Topology(l2, "wifi", [Node("a"), Node("b", is_ap=True),
+                                 Node("c"), Node("ES", is_es=True)])
+    l1.unicast("wifi", MODEL_BYTES)                       # a -> c relayed
+    topo.unicast(topo.node("a"), topo.node("c"), MODEL_BYTES)
+    l1.unicast("wifi", MODEL_BYTES, dst_is_ap=True)       # a -> b direct
+    topo.unicast(topo.node("a"), topo.node("b"), MODEL_BYTES)
+    l1.unicast("wifi", MODEL_BYTES, dst_is_es=True)       # a -> ES
+    topo.unicast(topo.node("a"), topo.node("ES"), MODEL_BYTES)
+    assert l1.total() == pytest.approx(l2.total())
+
+
+def test_topology_collectives_sum_to_unicasts():
+    nodes = [Node("a", is_ap=True), Node("b"), Node("c")]
+    t1, t2 = Topology(Ledger(), "wifi", nodes), Topology(Ledger(), "wifi",
+                                                         nodes)
+    t1.exchange_all(100.0)
+    for s in nodes:
+        for d in nodes:
+            if s.name != d.name:
+                t2.unicast(s, d, 100.0)
+    assert t1.ledger.total() == pytest.approx(t2.ledger.total())
+    t1.ledger, t2.ledger = Ledger(), Ledger()
+    t1b = Topology(Ledger(), "4g", nodes)
+    t1b.broadcast(nodes[0], 50.0)
+    t1b.gather(nodes[0], 50.0)
+    # 2 peers each way, infrastructure: (1 tx + 1 rx) * 4 transfers
+    expected = 4 * (TECHS["4g"].tx_mj(50.0) + TECHS["4g"].rx_mj(50.0))
+    assert t1b.ledger.total() == pytest.approx(expected)
+
+
+def test_unknown_transport_rejected():
+    with pytest.raises(KeyError):
+        Topology(Ledger(), "carrier-pigeon", [])
+    with pytest.raises(KeyError):
+        run_scenario(dataclasses.replace(BASE, engine="warp"), DATA)
+
+
+def test_fleet_nodes_roles():
+    dcs = [htl.DC("SM1", DATA.x_train[:5].astype(np.float32),
+                  DATA.y_train[:5]),
+           htl.DC("ES", DATA.x_train[5:9].astype(np.float32),
+                  DATA.y_train[5:9], is_es=True)]
+    nodes = fleet_nodes(dcs, "SM1")
+    assert nodes[0].is_ap and not nodes[0].is_es
+    assert nodes[1].is_es and not nodes[1].is_ap

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # deterministic shim, tests/_hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.configs.base import OptimizerConfig
 from repro.optim.adamw import (adamw_init, adamw_update, clip_by_global_norm,

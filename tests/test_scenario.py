@@ -4,7 +4,10 @@ import dataclasses
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # deterministic shim, tests/_hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.scenario import (ScenarioConfig, _zipf_probs, run_scenario)
 from repro.data.synthetic_covtype import make_covtype_like
