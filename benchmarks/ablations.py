@@ -6,6 +6,10 @@
    max-data and random election.
 3. Source-pool ablation: does including the previous global model as a
    GreedyTL source (the incremental mechanism) actually matter?
+4. Engine timing: the batched ``fleet`` engine (which ablations 1-2 run
+   on — policies resolve through repro.core.htl at call time, so the
+   monkey-patches apply to both engines) vs the per-DC ``loop`` reference,
+   seeds replica-stacked vs sequential. Timings land in ablations.json.
 
     PYTHONPATH=src python -m benchmarks.ablations [--windows 40]
 """
@@ -15,10 +19,11 @@ import argparse
 import dataclasses
 import json
 import os
+import time
 
 import numpy as np
 
-from repro.core.scenario import ScenarioConfig, run_scenario
+from repro.core.scenario import ScenarioConfig, run_scenario, run_sweep
 from repro.data.synthetic_covtype import make_covtype_like
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
@@ -94,6 +99,34 @@ def prev_model_source_ablation(data, windows, seeds=2):
     return out
 
 
+def engine_timing(data, windows, seeds=3):
+    """Fleet vs loop engine wall-clock on the ablation workload (ROADMAP:
+    drive the fleet path through the ablations too), and replica-stacked vs
+    sequential seed handling for the fleet engine. Warm timings (the jit
+    cache is shared across variants), F1 parity asserted as a side effect.
+    """
+    out = {}
+    f1 = {}
+    for engine, stack in (("fleet", True), ("fleet", False),
+                          ("loop", False)):
+        cfgs = [ScenarioConfig(algo="star", tech="wifi", windows=windows,
+                               eval_every=max(1, windows // 10), seed=s,
+                               engine=engine) for s in range(seeds)]
+        run_sweep(cfgs, data, stack_seeds=stack)       # warm the jit cache
+        t0 = time.time()
+        rs = run_sweep(cfgs, data, stack_seeds=stack)
+        label = f"{engine}_stacked" if stack else engine
+        out[f"{label}_s"] = round(time.time() - t0, 3)
+        f1[label] = round(float(np.mean([r.converged_f1() for r in rs])), 4)
+    out["fleet_speedup_vs_loop"] = round(out["loop_s"] / out["fleet_s"], 2)
+    out["stacking_speedup"] = round(out["fleet_s"] / out["fleet_stacked_s"],
+                                    2)
+    assert abs(f1["fleet"] - f1["loop"]) < 1e-3, f1
+    assert abs(f1["fleet"] - f1["fleet_stacked"]) < 1e-3, f1
+    out["converged_f1"] = f1["fleet"]
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--windows", type=int, default=40)
@@ -103,6 +136,7 @@ def main():
         "ema_rate": ema_ablation(data, args.windows),
         "election": election_ablation(data, args.windows),
         "prev_model_source": prev_model_source_ablation(data, args.windows),
+        "engine_timing": engine_timing(data, args.windows),
     }
     print(json.dumps(out, indent=1))
     os.makedirs(RESULTS_DIR, exist_ok=True)

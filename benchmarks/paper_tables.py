@@ -4,6 +4,14 @@ All energies in mJ, F-measures on the held-out test set, losses relative to
 our own Edge-Only run (exactly how the paper computes its losses). Results
 are cached under results/benchmarks/ as JSON; ``--quick`` runs fewer windows
 and seeds for CI-speed smoke validation.
+
+The whole grid is built up front and evaluated by ONE
+:func:`~repro.core.scenario.run_sweep` call with ``stack_seeds=True``: every
+stack-compatible row x seed replica (same algorithm, any mix of seeds,
+technologies, p_edge, allocation and aggregation settings) runs in lockstep
+on a shared fleet axis, so the sweep pays O(sample buckets) jitted
+dispatches per window for a whole table column group instead of O(rows x
+seeds).
 """
 from __future__ import annotations
 
@@ -21,10 +29,8 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
                            "benchmarks")
 
 
-def _avg(cfgs, data, n_seeds):
-    """Sweep a scenario over seeds; average converged F1 and energies."""
-    results = run_sweep([dataclasses.replace(cfgs, seed=s)
-                         for s in range(n_seeds)], data)
+def _stats(results):
+    """Aggregate one row's seed replicas: converged F1 and energies."""
     curves = [r.f1_curve for r in results]
     return {
         "f1": float(np.mean([r.converged_f1() for r in results])),
@@ -37,6 +43,52 @@ def _avg(cfgs, data, n_seeds):
     }
 
 
+def _grid(base: ScenarioConfig):
+    """(label, config) pairs for every table row of the paper."""
+    rows = [("fig2_edge_only", dataclasses.replace(base, algo="edge_only"))]
+
+    # -- Table 2: partial data on the edge (StarHTL, 4G between DCs) --------
+    for frac, lbl in [(0.5, "50"), (0.15, "15"), (0.03, "3")]:
+        rows.append((f"table2_edge{lbl}pct",
+                     dataclasses.replace(base, algo="star", p_edge=frac,
+                                         tech="4g")))
+
+    # -- Table 3: no data on edge, Zipf, A2A/Star x 4G/WiFi ------------------
+    for algo in ("a2a", "star"):
+        for tech in ("4g", "wifi"):
+            rows.append((f"table3_{algo}_{tech}",
+                         dataclasses.replace(base, algo=algo, tech=tech)))
+
+    # -- Table 4: + data-aggregation heuristic (Zipf) ------------------------
+    for algo in ("a2a", "star"):
+        for tech in ("4g", "wifi"):
+            rows.append((f"table4_{algo}_{tech}_agg",
+                         dataclasses.replace(base, algo=algo, tech=tech,
+                                             aggregate=True)))
+
+    # -- Tables 5/6: uniform initial distribution ----------------------------
+    for algo in ("a2a", "star"):
+        for tech in ("4g", "wifi"):
+            rows.append((f"table5_{algo}_{tech}_uniform",
+                         dataclasses.replace(base, algo=algo, tech=tech,
+                                             uniform=True)))
+            rows.append((f"table6_{algo}_{tech}_uniform_agg",
+                         dataclasses.replace(base, algo=algo, tech=tech,
+                                             uniform=True, aggregate=True)))
+
+    # -- Tables 8/9: GreedyTL sub-sampling (computational complexity) --------
+    for n_sub in (2, 5, 10):
+        for algo in ("a2a", "star"):
+            rows.append((f"table8_{algo}_n{n_sub}",
+                         dataclasses.replace(base, algo=algo, tech="wifi",
+                                             n_subsample=n_sub)))
+            rows.append((f"table9_{algo}_n{n_sub}_uniform",
+                         dataclasses.replace(base, algo=algo, tech="wifi",
+                                             uniform=True,
+                                             n_subsample=n_sub)))
+    return rows
+
+
 def run_all(windows: int = 100, n_seeds: int = 3, quick: bool = False,
             engine: str = "fleet"):
     if quick:
@@ -46,59 +98,32 @@ def run_all(windows: int = 100, n_seeds: int = 3, quick: bool = False,
 
     base = ScenarioConfig(windows=windows, eval_every=max(1, windows // 20),
                           engine=engine)
+    rows = _grid(base)
 
     t0 = time.time()
+    configs = [dataclasses.replace(cfg, seed=s)
+               for _, cfg in rows for s in range(n_seeds)]
+    print(f"sweeping {len(rows)} rows x {n_seeds} seed(s), {windows} "
+          f"windows, replica-stacked (rows print when the sweep returns)",
+          flush=True)
+    results = run_sweep(configs, data, stack_seeds=True)
+    out["sweep_seconds"] = round(time.time() - t0, 1)
+    print(f"sweep done in {out['sweep_seconds']}s", flush=True)
 
-    # -- Figure 2 / benchmark: all data on the edge server ------------------
-    edge = _avg(dataclasses.replace(base, algo="edge_only"), data, n_seeds)
-    out["fig2_edge_only"] = edge
-    ref_f1, ref_e = edge["f1"], edge["energy_mj"]
-
-    def row(label, cfg):
-        r = _avg(cfg, data, n_seeds)
-        r["gain_pct"] = 100.0 * (1 - r["energy_mj"] / ref_e)
-        r["acc_loss_pct"] = 100.0 * (ref_f1 - r["f1"]) / max(ref_f1, 1e-9)
+    ref = None
+    for i, (label, _) in enumerate(rows):
+        r = _stats(results[i * n_seeds:(i + 1) * n_seeds])
+        if label == "fig2_edge_only":
+            ref = r
+        else:
+            r["gain_pct"] = 100.0 * (1 - r["energy_mj"] / ref["energy_mj"])
+            r["acc_loss_pct"] = (100.0 * (ref["f1"] - r["f1"])
+                                 / max(ref["f1"], 1e-9))
+            print(f"{label:34s} E={r['energy_mj']:8.0f} mJ "
+                  f"gain={r['gain_pct']:5.1f}% "
+                  f"F1={r['f1']:.3f} loss={r['acc_loss_pct']:4.1f}%",
+                  flush=True)
         out[label] = r
-        print(f"[{time.time() - t0:6.0f}s] {label:34s} "
-              f"E={r['energy_mj']:8.0f} mJ gain={r['gain_pct']:5.1f}% "
-              f"F1={r['f1']:.3f} loss={r['acc_loss_pct']:4.1f}%", flush=True)
-
-    # -- Table 2: partial data on the edge (StarHTL, 4G between DCs) --------
-    for frac, lbl in [(0.5, "50"), (0.15, "15"), (0.03, "3")]:
-        row(f"table2_edge{lbl}pct",
-            dataclasses.replace(base, algo="star", p_edge=frac, tech="4g"))
-
-    # -- Table 3: no data on edge, Zipf, A2A/Star x 4G/WiFi ------------------
-    for algo in ("a2a", "star"):
-        for tech in ("4g", "wifi"):
-            row(f"table3_{algo}_{tech}",
-                dataclasses.replace(base, algo=algo, tech=tech))
-
-    # -- Table 4: + data-aggregation heuristic (Zipf) ------------------------
-    for algo in ("a2a", "star"):
-        for tech in ("4g", "wifi"):
-            row(f"table4_{algo}_{tech}_agg",
-                dataclasses.replace(base, algo=algo, tech=tech,
-                                    aggregate=True))
-
-    # -- Tables 5/6: uniform initial distribution ----------------------------
-    for algo in ("a2a", "star"):
-        for tech in ("4g", "wifi"):
-            row(f"table5_{algo}_{tech}_uniform",
-                dataclasses.replace(base, algo=algo, tech=tech, uniform=True))
-            row(f"table6_{algo}_{tech}_uniform_agg",
-                dataclasses.replace(base, algo=algo, tech=tech, uniform=True,
-                                    aggregate=True))
-
-    # -- Tables 8/9: GreedyTL sub-sampling (computational complexity) --------
-    for n_sub in (2, 5, 10):
-        for algo in ("a2a", "star"):
-            row(f"table8_{algo}_n{n_sub}",
-                dataclasses.replace(base, algo=algo, tech="wifi",
-                                    n_subsample=n_sub))
-            row(f"table9_{algo}_n{n_sub}_uniform",
-                dataclasses.replace(base, algo=algo, tech="wifi",
-                                    uniform=True, n_subsample=n_sub))
 
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(os.path.join(RESULTS_DIR, "paper_tables.json"), "w") as f:

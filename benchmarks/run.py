@@ -83,6 +83,34 @@ def bench_kernels(quick: bool):
     return rows
 
 
+def bench_greedytl(quick: bool):
+    """GreedyTL source-selection microbenchmark: us/call vs candidate-pool
+    size M (the factorized-LOO hot path; track this in results/)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.greedytl import greedytl
+
+    rng = np.random.default_rng(0)
+    F, C, cap = 54, 7, 160
+    x = jnp.asarray(rng.normal(size=(cap, F)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, C, cap).astype(np.int32))
+    m = jnp.asarray(np.ones(cap, np.float32))
+    rows = []
+    n = 10 if quick else 30
+    for M in (8, 16, 32):
+        src = jnp.asarray(rng.normal(0, 0.5, (M, F + 1, C))
+                          .astype(np.float32))
+        sm = jnp.asarray(np.ones(M, np.float32))
+        f = lambda: greedytl(x, y, m, src, sm, num_classes=C)[0]
+        jax.block_until_ready(f())
+        t0 = time.time()
+        for _ in range(n):
+            jax.block_until_ready(f())
+        rows.append((f"greedytl_M{M}", (time.time() - t0) / n * 1e6,
+                     f"cap={cap} factorized-LOO"))
+    return rows
+
+
 def bench_fleet_engine(quick: bool):
     """Fleet vs loop engine: warm per-scenario wall-clock and per-window
     jitted dispatch counts (the fleet engine is O(1) per window)."""
@@ -131,6 +159,38 @@ def bench_fleet_engine(quick: bool):
                      f"speedup={times['loop'] / times['fleet']:.2f}x "
                      f"train_dispatches_loop={counts['loop']} "
                      f"fleet={counts['fleet']} ({windows} windows)"))
+    return rows
+
+
+def bench_stacked_sweep(quick: bool):
+    """Replica-stacked sweep vs sequential per-seed runs (ROADMAP: batched
+    multi-seed rounds) — same configs, same results, fewer dispatches."""
+    import dataclasses
+
+    from repro.core.dispatch import dispatch_counts, reset_dispatch_counts
+    from repro.core.scenario import ScenarioConfig, run_sweep
+    from repro.data.synthetic_covtype import make_covtype_like
+
+    data = make_covtype_like(seed=0)
+    windows = 6 if quick else 20
+    base = ScenarioConfig(windows=windows, eval_every=windows, algo="a2a",
+                          tech="wifi")
+    cfgs = [dataclasses.replace(base, seed=s) for s in range(4)]
+    rows = []
+    run_sweep(cfgs, data, stack_seeds=True)        # warm the jit cache
+    times, counts = {}, {}
+    for label, stack in (("sequential", False), ("stacked", True)):
+        reset_dispatch_counts()
+        t0 = time.time()
+        run_sweep(cfgs, data, stack_seeds=stack)
+        times[label] = (time.time() - t0) * 1e6
+        c = dispatch_counts()
+        counts[label] = sum(v for k, v in c.items() if "fleet" in k)
+    rows.append(("sweep_stacked_4seeds", times["stacked"],
+                 f"sequential_us={times['sequential']:.0f} "
+                 f"speedup={times['sequential'] / times['stacked']:.2f}x "
+                 f"dispatches={counts['stacked']} "
+                 f"vs {counts['sequential']} ({windows} windows)"))
     return rows
 
 
@@ -186,8 +246,8 @@ def main():
     args, _ = ap.parse_known_args()
 
     print("name,us_per_call,derived")
-    sections = [bench_fleet_engine, bench_kernels, bench_htl_trainer,
-                bench_dryrun_summary]
+    sections = [bench_greedytl, bench_fleet_engine, bench_stacked_sweep,
+                bench_kernels, bench_htl_trainer, bench_dryrun_summary]
     if not args.skip_tables:
         sections.insert(
             0, functools.partial(bench_paper_tables, engine=args.engine))

@@ -3,8 +3,11 @@ how much data reaches the edge server, which radio links the mules use, and
 the HTL variant. Prints a small ASCII table (the analogue of paper Fig. 3 +
 Tables 2-4).
 
-The whole grid goes through one :func:`repro.core.scenario.run_sweep` call,
-so every configuration after the first reuses the batched fleet engine's
+The whole grid goes through one :func:`repro.core.scenario.run_sweep` call
+with ``stack_seeds=True``, so stack-compatible configurations (same
+algorithm, any mix of technologies / p_edge / aggregation) run in lockstep
+on a shared fleet axis — O(sample buckets) jitted dispatches per window for
+each group — and every configuration reuses the batched fleet engine's
 jitted executables.
 
     PYTHONPATH=src python examples/energy_tradeoff.py --windows 30
@@ -38,7 +41,7 @@ def main():
                          dataclasses.replace(base, algo=algo, tech=tech,
                                              aggregate=True)))
 
-    results = run_sweep([cfg for _, cfg in grid], data)
+    results = run_sweep([cfg for _, cfg in grid], data, stack_seeds=True)
     rows = list(zip((name for name, _ in grid), results))
 
     edge = rows[0][1]

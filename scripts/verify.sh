@@ -12,4 +12,8 @@ if [[ "${1:-}" == "--fast" ]]; then
 fi
 
 python -m pytest -x -q "${MARK[@]}"
+# dispatch-count regression gate: O(1) jitted dispatches per window, no
+# per-DC / per-replica loops (redundant with the suite above, but kept as
+# an explicit, individually-runnable CI gate)
+python -m pytest -q tests/test_dispatch_gate.py
 python -m benchmarks.run --quick --skip-tables

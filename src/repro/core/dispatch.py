@@ -1,0 +1,43 @@
+"""Jitted-dispatch accounting for the HTL engines.
+
+The fleet engine's contract is O(1) jitted dispatches per collection window
+(vs one per DC — or per seed replica — in the loop engine), and the sweep
+layer's contract is that seed stacking does not multiply dispatches by the
+seed count. Those are easy properties to silently regress (one refactor that
+re-introduces a Python loop over DCs around a jitted call), so every jitted
+entry point of the algorithm layer is wrapped with :func:`count_dispatch`
+and a CI gate (tests/test_dispatch_gate.py, run by scripts/verify.sh)
+asserts the counts.
+
+A "dispatch" here is one Python-level call into a jitted entry point — the
+unit of host-sync / executable-launch overhead the fleet engine exists to
+amortise. Counting wraps the function object itself, so the gate also
+catches loops hidden inside helper modules, not just the engine drivers.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from functools import wraps
+
+_COUNTS: Counter = Counter()
+
+
+def count_dispatch(name: str):
+    """Decorator: count Python-level calls into a jitted entry point."""
+    def deco(fn):
+        @wraps(fn)
+        def wrapper(*args, **kwargs):
+            _COUNTS[name] += 1
+            return fn(*args, **kwargs)
+        wrapper.__wrapped__ = fn
+        return wrapper
+    return deco
+
+
+def reset_dispatch_counts() -> None:
+    _COUNTS.clear()
+
+
+def dispatch_counts() -> dict:
+    """Snapshot of {entry-point name: call count} since the last reset."""
+    return dict(_COUNTS)

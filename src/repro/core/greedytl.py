@@ -26,6 +26,17 @@ collapses EXACTLY into one linear model:
 
 so the deployed model is identical to the fitted one, the on-wire model size
 stays constant, and the paper's Step-4 averaging is well-posed.
+
+**Factorized LOO (DESIGN.md §4).** Every ridge here is solved through one
+masked Cholesky factor G = LLᵀ of the column-masked Gram system — never
+``jnp.linalg.inv``. Trial scoring in the greedy loop reuses the factor of
+the *current* active set across all M candidates via the bordering identity
+(Schur complement of the added row/column), which drops per-candidate cost
+from O(D³) to O(D²) and collapses the whole trial sweep into one fused
+kernel launch (``repro.kernels.loo_trials``; pure-jnp fallback on CPU).
+The factor is rebuilt only when a candidate is accepted — which is exactly
+once per surviving while_loop step, since the loop exits on the first
+non-accepting step.
 """
 from __future__ import annotations
 
@@ -33,45 +44,84 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+from jax.scipy.linalg import solve_triangular
 
+from repro.core.dispatch import count_dispatch
 from repro.core.svm import svm_scores
+from repro.kernels import ops as kernel_ops
+
+
+def _chol_masked(AtA, lam_d, cmask):
+    """Cholesky factor of the column-masked ridge Gram system.
+
+    Masked-out rows/columns reduce to their diagonal λ (the 0/1 mask zeroes
+    every off-diagonal entry), so the factor keeps the same masked sparsity
+    and the active block factors independently — no shape change needed.
+    """
+    cm2 = cmask[:, None] * cmask[None, :]
+    return jnp.linalg.cholesky(AtA * cm2 + jnp.diag(lam_d))
+
+
+def _loo_ridge_chol(AtA, Aty, A_rm, y, rmask, cmask, lam_d):
+    """Column-masked ridge + closed-form LOO error from a PRECOMPUTED Gram
+    system, via Cholesky. A_rm is the row-masked data (R, D); the O(R D²)
+    products AᵀA and Aᵀy are shared across callers instead of rebuilt.
+
+    Returns (loo_sse, coeffs (D,)). The LOO identity uses the whitened rows
+    Ut = (L⁻¹ Amᵀ)ᵀ: leverage h_i = ‖u_i‖² and fit ŷ_i = u_iᵀz with
+    z = L⁻¹(Aᵀy) — both O(D²) per row, no inverse materialised.
+    """
+    L = _chol_masked(AtA, lam_d, cmask)
+    Am = A_rm * cmask[None, :]
+    Ut = solve_triangular(L, Am.T, lower=True).T            # (R, D)
+    z = solve_triangular(L, Aty * cmask, lower=True)        # (D,)
+    v = solve_triangular(L.T, z, lower=False) * cmask
+    resid = (Ut @ z - y) * rmask
+    h = jnp.sum(Ut ** 2, axis=-1)
+    loo = resid / jnp.maximum(1.0 - h, 0.1)
+    return jnp.sum(loo ** 2), v
 
 
 def _loo_ridge(A, y, rmask, cmask, lam):
-    """Ridge with LOO error. A: (R,D); y: (R,); rmask: (R,); cmask: (D,).
-
-    ``lam`` may be a scalar or a per-column vector (D,) — the per-class bias
-    columns get a stronger penalty so that a few samples per class cannot
-    shift a good source's decision boundaries.
-    Returns (loo_sse, coeffs (D,)).
+    """Ridge with LOO error from raw data. A: (R,D); y: (R,); rmask: (R,);
+    cmask: (D,). ``lam`` may be a scalar or a per-column vector (D,).
+    Thin Gram-building wrapper over :func:`_loo_ridge_chol` (the Stage-2
+    per-class correction shares the factorized path with Stage 1).
     """
-    Am = A * cmask[None, :] * rmask[:, None]
     D = A.shape[1]
-    G = Am.T @ Am + jnp.diag(jnp.broadcast_to(lam, (D,)) + 1e-4)
-    Ginv = jnp.linalg.inv(G)
-    v = (Ginv @ (Am.T @ (y * rmask))) * cmask
-    resid = (Am @ v - y) * rmask
-    h = jnp.sum((Am @ Ginv) * Am, axis=-1)
-    loo = resid / jnp.maximum(1.0 - h, 0.1)
-    return jnp.sum(loo ** 2), v
+    A_rm = A * rmask[:, None]
+    lam_d = jnp.broadcast_to(lam, (D,)) + 1e-4
+    return _loo_ridge_chol(A_rm.T @ A_rm, A_rm.T @ (y * rmask), A_rm, y,
+                           rmask, cmask, lam_d)
 
 
-def _loo_ridge_gram(AtA, Aty, A_rm, y, rmask, cmask, lam_d):
-    """Column-masked ridge + LOO error from a PRECOMPUTED Gram system.
+def _score_trials(AtA, Aty, A_rm, y, rmask, cmask, lam_d, M):
+    """LOO SSE of every candidate bordering j < M of the active set cmask.
 
-    Mathematically identical to :func:`_loo_ridge` (the column mask is 0/1,
-    so masking the Gram matrix equals the Gram of the masked matrix), but
-    the O(R D^2) products ``A^T A`` and ``A^T y`` are shared across the
-    hundreds of greedy-selection trials instead of rebuilt per trial.
+    Factors the active system once, then scores all M candidates through
+    the bordering identity: with c_j = L⁻¹g_j and Schur pivot
+    d_j² = (G_jj + λ_j) − ‖c_j‖², the bordered factor extends every shared
+    solve by one entry — t_ij = (A_ij − u_iᵀc_j)/d_j — so leverage and fit
+    update by rank 1 per row. The (R,M) sweep runs as one fused kernel.
+    Candidates already active (or masked) get finite garbage here; the
+    greedy loop overwrites them with +inf.
     """
-    cm2 = cmask[:, None] * cmask[None, :]
-    G = AtA * cm2 + jnp.diag(lam_d)
-    Ginv = jnp.linalg.inv(G)
-    v = (Ginv @ (Aty * cmask)) * cmask
-    resid = (A_rm @ v - y) * rmask
-    h = jnp.sum((A_rm @ (Ginv * cm2)) * A_rm, axis=-1)
-    loo = resid / jnp.maximum(1.0 - h, 0.1)
-    return jnp.sum(loo ** 2), v
+    L = _chol_masked(AtA, lam_d, cmask)
+    Am = A_rm * cmask[None, :]
+    Ut = solve_triangular(L, Am.T, lower=True).T            # (R, D)
+    z = solve_triangular(L, Aty * cmask, lower=True)        # (D,)
+    h_base = jnp.sum(Ut ** 2, axis=-1)
+    fitted_base = Ut @ z
+    Cc = solve_triangular(L, AtA[:, :M] * cmask[:, None], lower=True)
+    dsq = jnp.diagonal(AtA)[:M] + lam_d[:M] - jnp.sum(Cc ** 2, axis=0)
+    # already-active candidates have a degenerate (≈0) Schur pivot whose
+    # rsqrt would blow up; the kernel contract wants dinv=0 for them (their
+    # objective then reads as the base set's — still finite, still masked
+    # to +inf by the greedy body before argmin)
+    dinv = jax.lax.rsqrt(jnp.maximum(dsq, 1e-8)) * (1.0 - cmask[:M])
+    zj = (Aty[:M] - Cc.T @ z) * dinv
+    return kernel_ops.loo_trials(Ut, Cc, A_rm[:, :M], fitted_base, h_base,
+                                 y, rmask, zj, dinv)
 
 
 def _greedytl(x, y, mask, src_w, src_mask, *, num_classes: int,
@@ -107,7 +157,7 @@ def _greedytl(x, y, mask, src_w, src_mask, *, num_classes: int,
     lam_d = jnp.broadcast_to(lam_vec, (A.shape[1],)) + 1e-4
 
     def _loo(cm):
-        return _loo_ridge_gram(AtA, Aty, A_rm, yr, rmask, cm, lam_d)
+        return _loo_ridge_chol(AtA, Aty, A_rm, yr, rmask, cm, lam_d)
 
     def cond(state):
         k, sel, best, done = state
@@ -115,15 +165,9 @@ def _greedytl(x, y, mask, src_w, src_mask, *, num_classes: int,
 
     def body(state):
         k, sel, best, done = state
-
-        def trial(j):
-            cand = jnp.where(jnp.arange(M) == j, 1.0, sel) * src_mask
-            cm = jnp.concatenate([cand, jnp.ones(C)])
-            obj, _ = _loo(cm)
-            invalid = (sel[j] > 0) | (src_mask[j] == 0)
-            return jnp.where(invalid, jnp.inf, obj)
-
-        objs = jax.vmap(trial)(jnp.arange(M))
+        cm = jnp.concatenate([sel * src_mask, jnp.ones(C)])
+        objs = _score_trials(AtA, Aty, A_rm, yr, rmask, cm, lam_d, M)
+        objs = jnp.where((sel > 0) | (src_mask == 0), jnp.inf, objs)
         j = jnp.argmin(objs)
         improved = (objs[j] < best) & ~done
         sel = jnp.where(improved, jnp.where(jnp.arange(M) == j, 1.0, sel),
@@ -163,23 +207,23 @@ def _greedytl(x, y, mask, src_w, src_mask, *, num_classes: int,
     return w_eff, sel
 
 
+@count_dispatch("greedytl")
 @partial(jax.jit, static_argnames=("num_classes", "k_max"))
 def greedytl(x, y, mask, src_w, src_mask, *, num_classes: int,
              lam_src: float = 0.1, lam_x: float = 10.0,
-             lam_bias: float = 2.0, k_max: int = 16, lam: float = None):
+             lam_bias: float = 2.0, k_max: int = 16):
     """Greedy source combination + gated local correction (see module doc).
 
     x: (n, F) padded local data; y: (n,); mask: (n,) row validity.
     src_w: (M, F+1, C) stacked source hypotheses; src_mask: (M,).
     Returns (w_eff (F+1, C), selected (M,) 0/1 source-selection mask).
     """
-    if lam is not None:           # backwards-compatible alias
-        lam_src = lam
     return _greedytl(x, y, mask, src_w, src_mask, num_classes=num_classes,
                      lam_src=lam_src, lam_x=lam_x, lam_bias=lam_bias,
                      k_max=k_max)
 
 
+@count_dispatch("greedytl_fleet")
 @partial(jax.jit, static_argnames=("num_classes", "k_max"))
 def greedytl_fleet(x, y, mask, src_w, src_mask, *, num_classes: int,
                    lam_src: float = 0.1, lam_x: float = 10.0,
@@ -203,3 +247,28 @@ def greedytl_fleet(x, y, mask, src_w, src_mask, *, num_classes: int,
                             num_classes=num_classes, lam_src=lam_src,
                             lam_x=lam_x, lam_bias=lam_bias, k_max=k_max),
         (x, y, mask))
+
+
+@count_dispatch("greedytl_fleet_stacked")
+@partial(jax.jit, static_argnames=("num_classes", "k_max"))
+def greedytl_fleet_stacked(x, y, mask, src_w, src_mask, *, num_classes: int,
+                           lam_src: float = 0.1, lam_x: float = 10.0,
+                           lam_bias: float = 2.0, k_max: int = 16):
+    """GreedyTL over a fleet where every DC carries its OWN source pool.
+
+    Seed-stacked variant of :func:`greedytl_fleet`: several scenario
+    replicas' fleets concatenate into one flat DC axis (ROADMAP: batched
+    multi-seed rounds), and since each replica's window exchanged different
+    base models, the pool gains a leading DC axis. x: (N, cap, F); y/mask:
+    (N, cap); src_w: (N, M, F+1, C); src_mask: (N, M).
+    Returns (w_eff (N, F+1, C), selected (N, M)).
+
+    ``lax.map`` keeps the per-DC slice graph identical to :func:`greedytl`,
+    so results are bitwise equal to N separate calls — one executable
+    launch serves every seed replica of a sweep configuration.
+    """
+    return jax.lax.map(
+        lambda t: _greedytl(t[0], t[1], t[2], t[3], t[4],
+                            num_classes=num_classes, lam_src=lam_src,
+                            lam_x=lam_x, lam_bias=lam_bias, k_max=k_max),
+        (x, y, mask, src_w, src_mask))

@@ -25,7 +25,7 @@ import numpy as np
 
 from repro.core.energy import INDEX_BYTES, Ledger, MODEL_BYTES, OBS_BYTES
 from repro.core.greedytl import greedytl
-from repro.core.svm import pad_local, train_svm
+from repro.core.svm import pad_local, sample_cap, train_svm
 from repro.core.topology import Topology, fleet_nodes
 
 M_CAP = 16        # max source hypotheses per GreedyTL call (padded, masked)
@@ -54,7 +54,9 @@ def label_entropy(y: np.ndarray, num_classes: int) -> float:
 
 
 def _train_base(dc: DC, cap: int, num_classes: int) -> np.ndarray:
-    x, y, m = pad_local(dc.x, dc.y, cap)
+    # bucketed sample capacity: padded rows are dead compute (masked rows
+    # contribute zero gradient), and the fleet engine buckets identically
+    x, y, m = pad_local(dc.x, dc.y, sample_cap(dc.n, cap))
     w = train_svm(jnp.asarray(x), jnp.asarray(y), jnp.asarray(m),
                   num_classes=num_classes)
     return np.asarray(w)
@@ -77,7 +79,7 @@ def _subsample(dc: DC, n_per_class: Optional[int], num_classes: int,
 
 def _greedy_refine(dc: DC, sources: List[np.ndarray], cap: int,
                    num_classes: int) -> np.ndarray:
-    x, y, m = pad_local(dc.x, dc.y, cap)
+    x, y, m = pad_local(dc.x, dc.y, sample_cap(dc.n, cap))
     src, src_mask = build_source_pool(sources, None)
     w_eff, _ = greedytl(jnp.asarray(x), jnp.asarray(y), jnp.asarray(m),
                         jnp.asarray(src), jnp.asarray(src_mask),

@@ -21,12 +21,18 @@ interchangeable (tests/test_fleet_engine.py).
 
 :func:`run_sweep` evaluates many configurations while sharing the jitted
 fleet trainers across them — the core workload of the paper's Tables 2-6.
+With ``stack_seeds=True`` it additionally runs all seed replicas of a
+configuration in lockstep, stacking them into the fleet DC axis so one
+jitted dispatch per window serves every seed (per-seed energy ledgers and
+rng streams stay separate — :func:`run_scenarios_stacked`).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -159,15 +165,32 @@ def update_global(cfg: ScenarioConfig, prev: Optional[np.ndarray],
     return (1.0 - eta) * prev + eta * new
 
 
+_predict = jax.jit(svm_predict)
+_EVAL_CACHE: list = []     # single entry: (data ref, device test array) —
+                           # the data ref pins the id; one slot, no growth
+
+
 def _eval(w: np.ndarray, data: Dataset) -> float:
-    pred = np.asarray(svm_predict(jnp.asarray(w),
-                                  jnp.asarray(data.x_test.astype(np.float32))))
+    if not _EVAL_CACHE or _EVAL_CACHE[0][0] is not data:
+        _EVAL_CACHE[:] = [(data, jnp.asarray(
+            data.x_test.astype(np.float32)))]
+    pred = np.asarray(_predict(jnp.asarray(w), _EVAL_CACHE[0][1]))
     return f_measure(data.y_test, pred, NUM_CLASSES)
 
 
 # ---------------------------------------------------------------------------
 # drivers
 # ---------------------------------------------------------------------------
+
+def _acc_cap(n_seen: int, n_total: int) -> int:
+    """Bucketed capacity for the ES's growing accumulated dataset (doubling
+    from 128): masked tail rows are dead compute for the trainer, so early
+    windows need not pay for the full-stream allocation."""
+    b = 128
+    while b < n_seen:
+        b *= 2
+    return min(b, n_total)
+
 
 def _run_edge_only(cfg: ScenarioConfig, data: Dataset, ledger: Ledger,
                    stream_x: np.ndarray, stream_y: np.ndarray
@@ -185,8 +208,9 @@ def _run_edge_only(cfg: ScenarioConfig, data: Dataset, ledger: Ledger,
         xacc[s] = stream_x[s]
         yacc[s] = stream_y[s]
         macc[s] = 1.0
-        w = train_svm(jnp.asarray(xacc), jnp.asarray(yacc),
-                      jnp.asarray(macc), num_classes=NUM_CLASSES,
+        b = _acc_cap((t + 1) * cfg.obs_per_window, n_total)
+        w = train_svm(jnp.asarray(xacc[:b]), jnp.asarray(yacc[:b]),
+                      jnp.asarray(macc[:b]), num_classes=NUM_CLASSES,
                       iters=300,
                       w0=None if w is None else jnp.asarray(w))
         w = np.asarray(w)
@@ -222,14 +246,105 @@ def run_scenario(cfg: ScenarioConfig, data: Dataset) -> ScenarioResult:
     return ScenarioResult(f1_curve, ledger, cfg)
 
 
-def run_sweep(configs: Sequence[ScenarioConfig], data: Dataset
-              ) -> List[ScenarioResult]:
+def _stack_key(cfg: ScenarioConfig) -> ScenarioConfig:
+    """Configs with equal keys may run replica-stacked: the normalized
+    fields only steer host-side work (collection rng, energy charging,
+    GreedyTL subsampling inputs, EMA rate), never the shapes or semantics
+    of the jitted calls, so stacking them changes nothing per replica."""
+    return dataclasses.replace(
+        cfg, seed=0, tech="4g", p_edge=0.0, uniform=False, aggregate=False,
+        n_subsample=None, zipf_alpha=1.5, lam_poisson=7.0,
+        global_update_rate=0.3, include_es_in_learning=True)
+
+
+def run_scenarios_stacked(cfgs: Sequence[ScenarioConfig], data: Dataset
+                          ) -> List[ScenarioResult]:
+    """Run several scenario replicas in lockstep — one dispatch set per
+    window for the whole group.
+
+    The replicas may differ in seed and in any host-side field (tech,
+    p_edge, uniform, aggregate, n_subsample, Zipf/Poisson parameters, EMA
+    rate — see :func:`_stack_key`). Each window, every replica collects its
+    own data (own rng stream, own energy ledger) and the learning rounds
+    stack into the flat fleet DC axis
+    (:func:`repro.core.fleet.run_window_a2a_stacked` / ``_star_stacked``),
+    so the group costs O(sample buckets) dispatches per window instead of
+    O(replicas). Results match sequential :func:`run_scenario` runs
+    replica-for-replica (ledgers exactly, F1 curves to the engine-parity
+    tolerance; tests/test_fleet_engine.py).
+    """
+    cfg0 = cfgs[0]
+    if any(_stack_key(c) != _stack_key(cfg0) for c in cfgs):
+        raise ValueError("run_scenarios_stacked needs configs that agree "
+                         "on every non-host-side field (see _stack_key)")
+    if cfg0.engine != "fleet" or cfg0.algo not in ("a2a", "star"):
+        return [run_scenario(c, data) for c in cfgs]
+    run_stacked = {"a2a": fleet_engine.run_window_a2a_stacked,
+                   "star": fleet_engine.run_window_star_stacked}[cfg0.algo]
+
+    S = len(cfgs)
+    rngs = [np.random.default_rng(c.seed) for c in cfgs]
+    ledgers = [Ledger() for _ in cfgs]
+    techs = [c.tech for c in cfgs]
+    n_subsamples = [c.n_subsample for c in cfgs]
+    n_total = cfg0.windows * cfg0.obs_per_window
+    streams = []
+    for rng in rngs:
+        order = rng.permutation(len(data.y_train))[:n_total]
+        streams.append((data.x_train[order].astype(np.float32),
+                        data.y_train[order].astype(np.int32)))
+
+    curves: List[List[float]] = [[] for _ in cfgs]
+    prevs: List[Optional[np.ndarray]] = [None] * S
+    for t in range(cfg0.windows):
+        sl = slice(t * cfg0.obs_per_window, (t + 1) * cfg0.obs_per_window)
+        fleets = []
+        for s in range(S):
+            dcs = collect_window(cfgs[s], rngs[s], streams[s][0][sl],
+                                 streams[s][1][sl], ledgers[s])
+            if cfgs[s].aggregate:
+                dcs = apply_aggregation_heuristic(dcs, ledgers[s], techs[s])
+            fleets.append(dcs)
+        news = run_stacked(fleets, prevs, ledgers, techs, cap=cfg0.cap,
+                           num_classes=NUM_CLASSES,
+                           n_subsamples=n_subsamples, rngs=rngs)
+        prevs = [update_global(cfgs[s], prevs[s], news[s]) for s in range(S)]
+        if (t + 1) % cfg0.eval_every == 0:
+            for s in range(S):
+                curves[s].append(_eval(prevs[s], data))
+    return [ScenarioResult(curves[s], ledgers[s], cfgs[s]) for s in range(S)]
+
+
+def run_sweep(configs: Sequence[ScenarioConfig], data: Dataset, *,
+              stack_seeds: bool = False) -> List[ScenarioResult]:
     """Evaluate many scenario configurations over the same dataset.
 
-    The batched fleet trainers are shape-stable (padded sample capacity,
+    The batched fleet trainers are shape-stable (bucketed sample capacity,
     bucketed DC capacity), so every configuration after the first reuses the
     same jitted executables — the sweep pays compilation once, which is what
     makes the paper's algorithm x technology x p_edge x aggregation grids
     (Tables 2-6) cheap to extend.
+
+    ``stack_seeds=True`` groups stack-compatible configs (equal
+    :func:`_stack_key`: same algo/engine/windows/cap, any mix of seeds and
+    host-side fields) and runs each group through
+    :func:`run_scenarios_stacked` — O(sample buckets) dispatches per window
+    for the whole group; other configs — and the default — run
+    sequentially. Result order always matches ``configs``.
     """
-    return [run_scenario(cfg, data) for cfg in configs]
+    if not stack_seeds:
+        return [run_scenario(cfg, data) for cfg in configs]
+    groups: dict = {}
+    for i, cfg in enumerate(configs):
+        groups.setdefault(_stack_key(cfg), []).append(i)
+    results: List[Optional[ScenarioResult]] = [None] * len(configs)
+    for key, idxs in groups.items():
+        grp = [configs[i] for i in idxs]
+        if (len(grp) == 1 or key.engine != "fleet"
+                or key.algo not in ("a2a", "star")):
+            rs = [run_scenario(c, data) for c in grp]
+        else:
+            rs = run_scenarios_stacked(grp, data)
+        for i, r in zip(idxs, rs):
+            results[i] = r
+    return results

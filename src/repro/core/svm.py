@@ -14,6 +14,29 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.dispatch import count_dispatch
+
+
+SAMPLE_BUCKETS = (16, 64)   # bucketed per-DC sample capacities (< config cap)
+
+
+def sample_cap(n: int, cap: int) -> int:
+    """Bucketed per-DC sample capacity for n local samples.
+
+    Masked (padded) rows contribute exactly zero to the hinge gradient and
+    to GreedyTL's Gram system, so training a DC at the smallest bucket that
+    holds its data gives the same model as padding to the full scenario
+    ``cap`` — while skipping the dead rows' compute, which dominates for
+    the paper's Zipf-allocated fleets (most mules hold <16 of a window's
+    100 observations but were padded to cap=160). The bucket set is tiny so
+    the jit cache stays small; ``cap`` itself is always the last bucket.
+    """
+    n = min(n, cap)
+    for b in SAMPLE_BUCKETS:
+        if n <= b < cap:
+            return b
+    return cap
+
 
 def svm_scores(w: jax.Array, x: jax.Array) -> jax.Array:
     """w: (F+1, C) with bias row last; x: (n, F)."""
@@ -52,6 +75,7 @@ def _train_svm(x: jax.Array, y: jax.Array, mask: jax.Array, *,
     return w
 
 
+@count_dispatch("train_svm")
 @partial(jax.jit, static_argnames=("num_classes", "iters"))
 def train_svm(x: jax.Array, y: jax.Array, mask: jax.Array, *,
               num_classes: int, lam: float = 1e-3, lr: float = 0.5,
@@ -64,6 +88,7 @@ def train_svm(x: jax.Array, y: jax.Array, mask: jax.Array, *,
                       iters=iters, w0=w0)
 
 
+@count_dispatch("train_svm_fleet")
 @partial(jax.jit, static_argnames=("num_classes", "iters"))
 def train_svm_fleet(x: jax.Array, y: jax.Array, mask: jax.Array, *,
                     num_classes: int, lam: float = 1e-3, lr: float = 0.5,

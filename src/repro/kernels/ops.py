@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import loo_trials as _loo
 from repro.kernels import rglru_scan as _rg
 from repro.kernels import ssd_scan as _ssd
 
@@ -47,3 +48,18 @@ def ssd_scan(x, dt, A, Bm, Cm, *, chunk=128):
 def rglru_scan(a, b, *, chunk=128, block_w=128):
     return _rg.rglru_scan(a, b, chunk=chunk, block_w=block_w,
                           interpret=_interpret())
+
+
+def loo_trials(ut, cc, a_cand, fitted_base, h_base, y, rmask, zj, dinv):
+    """GreedyTL Cholesky-bordering trial scorer (see kernels.loo_trials).
+
+    Unlike the model kernels above, the non-TPU path here is the pure-jnp
+    reference rather than ``interpret=True``: this runs inside GreedyTL's
+    greedy while_loop, where interpret mode's Python-per-grid-cell cost
+    would dwarf the linalg it fuses. Same contract either way.
+    """
+    if _interpret():
+        return _loo.loo_trials_ref(ut, cc, a_cand, fitted_base, h_base, y,
+                                   rmask, zj, dinv)
+    return _loo.loo_trials(ut, cc, a_cand, fitted_base, h_base, y, rmask,
+                           zj, dinv)

@@ -56,6 +56,27 @@ def ssd_reference(x, dt, A, Bm, Cm):
     return ys.transpose(1, 0, 2, 3).astype(x.dtype), hN.astype(x.dtype)
 
 
+def loo_trials_inv_reference(AtA, Aty, A_rm, y, rmask, cmask, lam_d, M):
+    """Inverse-based greedy-trial scorer — the O(M·D³) formulation the
+    Cholesky-bordering kernel replaces. For each candidate column j < M it
+    solves the column-masked ridge over active ∪ {j} via ``jnp.linalg.inv``
+    and returns the closed-form LOO SSE (M,). Ground truth for
+    ``loo_trials`` / ``loo_trials_ref`` parity tests.
+    """
+    def one(j):
+        cm = jnp.where(jnp.arange(cmask.shape[0]) == j, 1.0, cmask)
+        cm2 = cm[:, None] * cm[None, :]
+        G = AtA * cm2 + jnp.diag(lam_d)
+        Ginv = jnp.linalg.inv(G)
+        v = (Ginv @ (Aty * cm)) * cm
+        resid = (A_rm @ v - y) * rmask
+        h = jnp.sum((A_rm @ (Ginv * cm2)) * A_rm, axis=-1)
+        loo = resid / jnp.maximum(1.0 - h, 0.1)
+        return jnp.sum(loo ** 2)
+
+    return jax.vmap(one)(jnp.arange(M))
+
+
 def rglru_reference(a, b, h0=None):
     """Sequential linear recurrence h_t = a_t h_{t-1} + b_t.
 

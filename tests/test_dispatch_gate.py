@@ -1,0 +1,73 @@
+"""CI dispatch-count regression gate (run explicitly by scripts/verify.sh).
+
+The fleet engine's contract: jitted dispatches per collection window are
+bounded by the (fixed, tiny) sample-bucket set — independent of the Poisson
+fleet size AND of how many seed/config replicas are stacked into the sweep
+group. A regression to per-DC or per-replica dispatch loops (e.g. a Python
+loop over DCs around ``train_svm``/``greedytl``) multiplies the count by
+~7x per window and fails these assertions.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core.dispatch import dispatch_counts, reset_dispatch_counts
+from repro.core.scenario import ScenarioConfig, run_scenario, run_sweep
+from repro.core.svm import SAMPLE_BUCKETS
+from repro.data.synthetic_covtype import make_covtype_like
+
+DATA = make_covtype_like(seed=0)
+WINDOWS = 5
+# per window: at most one train + one refine dispatch per sample bucket
+BUCKETS = len(SAMPLE_BUCKETS) + 1
+PER_WINDOW_BOUND = 2 * BUCKETS
+
+
+def _counts(cfgs, stack):
+    reset_dispatch_counts()
+    if stack:
+        run_sweep(cfgs, DATA, stack_seeds=True)
+    else:
+        for c in cfgs:
+            run_scenario(c, DATA)
+    return dispatch_counts()
+
+
+@pytest.mark.parametrize("algo", ["a2a", "star"])
+def test_fleet_window_dispatches_bounded_by_buckets(algo):
+    cfg = ScenarioConfig(windows=WINDOWS, eval_every=WINDOWS, algo=algo)
+    c = _counts([cfg], stack=False)
+    # the fleet engine must never fall back to per-DC entry points
+    assert c.get("train_svm", 0) == 0
+    assert c.get("greedytl", 0) == 0
+    jitted = c.get("train_svm_fleet", 0) + c.get("greedytl_fleet", 0) \
+        + c.get("greedytl_fleet_stacked", 0)
+    assert 0 < jitted <= WINDOWS * PER_WINDOW_BOUND, c
+
+
+@pytest.mark.parametrize("algo", ["a2a", "star"])
+def test_stacked_sweep_dispatches_independent_of_replicas(algo):
+    """Stacking S replicas must NOT multiply dispatches by S."""
+    base = ScenarioConfig(windows=WINDOWS, eval_every=WINDOWS, algo=algo)
+    cfgs = [dataclasses.replace(base, seed=s) for s in range(4)]
+    c = _counts(cfgs, stack=True)
+    assert c.get("train_svm", 0) == 0 and c.get("greedytl", 0) == 0
+    jitted = c.get("train_svm_fleet", 0) + c.get("greedytl_fleet", 0) \
+        + c.get("greedytl_fleet_stacked", 0)
+    assert 0 < jitted <= WINDOWS * PER_WINDOW_BOUND, c
+
+    # ... while the same group run sequentially costs ~S times as much
+    seq = _counts(cfgs, stack=False)
+    seq_jitted = seq.get("train_svm_fleet", 0) \
+        + seq.get("greedytl_fleet", 0) + seq.get("greedytl_fleet_stacked", 0)
+    assert seq_jitted >= 2 * jitted, (seq, c)
+
+
+def test_loop_engine_still_counts_per_dc():
+    """The counter itself must see the loop engine's per-DC dispatches
+    (guards against the gate silently counting nothing)."""
+    cfg = ScenarioConfig(windows=WINDOWS, eval_every=WINDOWS, algo="a2a",
+                         engine="loop")
+    c = _counts([cfg], stack=False)
+    assert c.get("train_svm", 0) > WINDOWS      # one per DC, Poisson(7)
+    assert c.get("greedytl", 0) > WINDOWS

@@ -8,6 +8,7 @@ import pytest
 from repro.core import fleet, htl
 from repro.core.energy import Ledger, MODEL_BYTES, TECHS
 from repro.core.scenario import ScenarioConfig, run_scenario, run_sweep
+from repro.core.svm import SAMPLE_BUCKETS
 from repro.core.topology import (Node, Topology, fleet_nodes,
                                  transfer_counts)
 from repro.data.synthetic_covtype import make_covtype_like
@@ -71,13 +72,50 @@ def test_fleet_dispatch_count_is_o1_per_window():
         fleet_calls = counts["fleet"]
     finally:
         htl.train_svm, fleet.train_svm_fleet = orig_train, orig_fleet
-    assert fleet_calls == 4                 # exactly one per window
-    assert loop_calls > fleet_calls         # one per DC (Poisson(7) fleet)
+    # at most one dispatch per sample bucket per window, regardless of the
+    # Poisson fleet size (the loop engine pays one per DC)
+    assert fleet_calls <= 4 * (len(SAMPLE_BUCKETS) + 1)
+    assert loop_calls > fleet_calls
+
+
+def test_stacked_sweep_matches_sequential():
+    """Replica-stacked sweeps (seeds and host-side config variants mixed
+    into one fleet axis) must reproduce sequential runs: ledgers exactly,
+    F1 curves within the engine-parity tolerance."""
+    for algo in ("star", "a2a"):
+        cfgs = [dataclasses.replace(BASE, algo=algo, seed=s)
+                for s in (0, 1, 2)]
+        cfgs += [dataclasses.replace(BASE, algo=algo, seed=0, tech="wifi",
+                                     n_subsample=5),
+                 dataclasses.replace(BASE, algo=algo, seed=1, p_edge=0.15,
+                                     aggregate=True)]
+        seq = [run_scenario(c, DATA) for c in cfgs]
+        stk = run_sweep(cfgs, DATA, stack_seeds=True)
+        for a, b in zip(seq, stk):
+            np.testing.assert_allclose(b.f1_curve, a.f1_curve, atol=1e-4)
+            assert a.ledger.by_purpose() == b.ledger.by_purpose()
+            assert a.ledger.by_tech() == b.ledger.by_tech()
+
+
+def test_stacked_sweep_preserves_order_and_incompatible_groups():
+    """A sweep mixing stackable groups, loop-engine configs and edge-only
+    configs must return results in input order with correct attribution."""
+    cfgs = [dataclasses.replace(BASE, algo="star", seed=0),
+            dataclasses.replace(BASE, algo="edge_only", seed=1),
+            dataclasses.replace(BASE, algo="star", seed=2),
+            dataclasses.replace(BASE, algo="star", seed=0, engine="loop")]
+    out = run_sweep(cfgs, DATA, stack_seeds=True)
+    for cfg, r in zip(cfgs, out):
+        assert r.cfg == cfg
+        single = run_scenario(cfg, DATA)
+        np.testing.assert_allclose(r.f1_curve, single.f1_curve, atol=1e-4)
+        assert r.ledger.by_purpose() == single.ledger.by_purpose()
 
 
 def test_fleet_cap_buckets():
-    assert fleet.fleet_cap(1) == 4
-    assert fleet.fleet_cap(4) == 4
+    assert fleet.fleet_cap(1) == 1      # singleton groups pad nothing (the
+    assert fleet.fleet_cap(2) == 2      # big Zipf mule sits alone in its
+    assert fleet.fleet_cap(4) == 4      # sample bucket most windows)
     assert fleet.fleet_cap(5) == 8
     assert fleet.fleet_cap(16) == 16
     assert fleet.fleet_cap(17) == 32

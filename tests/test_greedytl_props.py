@@ -7,8 +7,11 @@ try:
 except ImportError:   # deterministic shim, tests/_hypothesis_fallback.py
     from _hypothesis_fallback import given, settings, strategies as st
 
-from repro.core.greedytl import greedytl
+from repro.core.greedytl import (greedytl, greedytl_fleet,
+                                 greedytl_fleet_stacked, _loo_ridge_chol,
+                                 _score_trials)
 from repro.core.svm import svm_scores
+from repro.kernels.ref import loo_trials_inv_reference
 
 F, C, M_CAP = 54, 7, 16
 
@@ -75,6 +78,87 @@ def test_scale_invariance_of_sources(seed):
     p1 = np.asarray(svm_scores(jnp.asarray(w1), jnp.asarray(x)))
     p2 = np.asarray(svm_scores(jnp.asarray(w2), jnp.asarray(x)))
     assert np.allclose(p1, p2, atol=0.2, rtol=0.1)
+
+
+def _random_gram_system(D, M, n_rows, seed):
+    """Random SPD column-masked ridge system (as Stage 1 builds them)."""
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(n_rows, D)).astype(np.float32)
+    y = rng.normal(size=n_rows).astype(np.float32)
+    rmask = (rng.random(n_rows) < 0.8).astype(np.float32)
+    sel = (rng.random(M) < 0.4).astype(np.float32)
+    cmask = np.concatenate([sel, np.ones(D - M, np.float32)])
+    lam_d = (np.abs(rng.normal(0.8, 0.5, D)) + 1e-3).astype(np.float32)
+    A_rm = A * rmask[:, None]
+    return (A_rm.T @ A_rm, A_rm.T @ (y * rmask), A_rm, y, rmask, cmask,
+            lam_d, sel)
+
+
+@given(seed=st.integers(min_value=0, max_value=200),
+       m=st.sampled_from([2, 8, M_CAP]),
+       rows=st.sampled_from([64, 224, 400]))
+@settings(max_examples=15, deadline=None)
+def test_cholesky_bordering_loo_matches_inverse(seed, m, rows):
+    """Property: on random SPD systems, every candidate's Cholesky-bordering
+    LOO objective equals the inverse-based formulation to <= 1e-5 rel."""
+    AtA, Aty, A_rm, y, rmask, cmask, lam_d, sel = _random_gram_system(
+        m + C, m, rows, seed)
+    args = tuple(jnp.asarray(v) for v in
+                 (AtA, Aty, A_rm, y, rmask, cmask, lam_d))
+    fac = np.asarray(_score_trials(*args, m))
+    ref = np.asarray(loo_trials_inv_reference(*args, m))
+    valid = sel == 0
+    if valid.any():
+        rel = (np.abs(fac - ref)[valid]
+               / np.maximum(np.abs(ref[valid]), 1e-6))
+        assert rel.max() < 1e-5, rel.max()
+
+
+@given(seed=st.integers(min_value=0, max_value=100))
+@settings(max_examples=8, deadline=None)
+def test_cholesky_solve_matches_inverse_solution(seed):
+    """The factorized full solve (used for the final coefficients and the
+    Stage-2 correction) matches the inverse-based ridge solution."""
+    AtA, Aty, A_rm, y, rmask, cmask, lam_d, _ = _random_gram_system(
+        M_CAP + C, M_CAP, 200, seed)
+    loo, v = _loo_ridge_chol(*(jnp.asarray(t) for t in
+                               (AtA, Aty, A_rm, y, rmask, cmask, lam_d)))
+    cm2 = cmask[:, None] * cmask[None, :]
+    Ginv = np.linalg.inv(AtA * cm2 + np.diag(lam_d))
+    v_ref = (Ginv @ (Aty * cmask)) * cmask
+    resid = (A_rm @ v_ref - y) * rmask
+    h = np.sum((A_rm * cmask) @ Ginv * (A_rm * cmask), axis=-1)
+    loo_ref = np.sum((resid / np.maximum(1.0 - h, 0.1)) ** 2)
+    np.testing.assert_allclose(np.asarray(v), v_ref, atol=1e-4)
+    assert abs(float(loo) - loo_ref) / max(loo_ref, 1e-6) < 1e-4
+
+
+def test_fleet_variants_bitwise_match_single_calls():
+    """lax.map fleet refiners must stay bitwise equal to per-call greedytl
+    (the loop/fleet engine parity contract)."""
+    rng = np.random.default_rng(7)
+    L, cap = 3, 32
+    x = rng.normal(size=(L, cap, F)).astype(np.float32)
+    y = rng.integers(0, C, (L, cap)).astype(np.int32)
+    m = (rng.random((L, cap)) < 0.6).astype(np.float32)
+    src = rng.normal(0, 0.5, (M_CAP, F + 1, C)).astype(np.float32)
+    sm = (np.arange(M_CAP) < 5).astype(np.float32)
+
+    singles = [greedytl(jnp.asarray(x[i]), jnp.asarray(y[i]),
+                        jnp.asarray(m[i]), jnp.asarray(src),
+                        jnp.asarray(sm), num_classes=C) for i in range(L)]
+    w_fleet, sel_fleet = greedytl_fleet(
+        jnp.asarray(x), jnp.asarray(y), jnp.asarray(m), jnp.asarray(src),
+        jnp.asarray(sm), num_classes=C)
+    srcs = np.broadcast_to(src, (L,) + src.shape)
+    sms = np.broadcast_to(sm, (L,) + sm.shape)
+    w_stk, sel_stk = greedytl_fleet_stacked(
+        jnp.asarray(x), jnp.asarray(y), jnp.asarray(m), jnp.asarray(srcs),
+        jnp.asarray(sms), num_classes=C)
+    for i, (wi, seli) in enumerate(singles):
+        assert np.array_equal(np.asarray(w_fleet)[i], np.asarray(wi)), i
+        assert np.array_equal(np.asarray(w_stk)[i], np.asarray(wi)), i
+        assert np.array_equal(np.asarray(sel_stk)[i], np.asarray(seli)), i
 
 
 def test_perfect_source_dominates():

@@ -2,10 +2,13 @@
 (interpret mode on CPU — kernel bodies execute in Python)."""
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.ref import mha_reference, rglru_reference, ssd_reference
+from repro.kernels.loo_trials import loo_trials, loo_trials_ref
+from repro.kernels.ref import (loo_trials_inv_reference, mha_reference,
+                               rglru_reference, ssd_reference)
 from repro.kernels.rglru_scan import rglru_scan
 from repro.kernels.ssd_scan import ssd_scan
 
@@ -91,6 +94,72 @@ def test_rglru_scan_sweep(B, S, W, chunk, bw, dtype):
     err = float(jnp.max(jnp.abs(h.astype(jnp.float32)
                                 - hr.astype(jnp.float32))))
     assert err < (1e-4 if dtype == jnp.float32 else 5e-2), f"err={err}"
+
+
+def _bordering_inputs(R, M, C, seed):
+    """Shared-factor quantities for a random masked ridge system, prepared
+    exactly as greedytl._score_trials does (Cholesky of the active set,
+    whitened rows, candidate borderings)."""
+    from jax.scipy.linalg import solve_triangular
+    rng = np.random.default_rng(seed)
+    D = M + C
+    A = rng.normal(size=(R, D)).astype(np.float32)
+    y = rng.normal(size=R).astype(np.float32)
+    rmask = (rng.random(R) < 0.8).astype(np.float32)
+    sel = (rng.random(M) < 0.3).astype(np.float32)
+    cmask = np.concatenate([sel, np.ones(C, np.float32)])
+    lam_d = (np.abs(rng.normal(0.5, 0.2, D)) + 1e-3).astype(np.float32)
+    A_rm = A * rmask[:, None]
+    AtA = A_rm.T @ A_rm
+    Aty = A_rm.T @ (y * rmask)
+
+    L = jnp.linalg.cholesky(AtA * (cmask[:, None] * cmask[None, :])
+                            + jnp.diag(lam_d))
+    Am = A_rm * cmask[None, :]
+    Ut = solve_triangular(L, Am.T, lower=True).T
+    z = solve_triangular(L, jnp.asarray(Aty * cmask), lower=True)
+    Cc = solve_triangular(L, jnp.asarray(AtA[:, :M] * cmask[:, None]),
+                          lower=True)
+    dsq = np.diag(AtA)[:M] + lam_d[:M] - jnp.sum(Cc ** 2, axis=0)
+    dinv = jax.lax.rsqrt(jnp.maximum(dsq, 1e-8))
+    zj = (Aty[:M] - Cc.T @ z) * dinv
+    shared = (Ut, Cc, jnp.asarray(A_rm[:, :M]), Ut @ z,
+              jnp.sum(Ut ** 2, -1), jnp.asarray(y), jnp.asarray(rmask),
+              zj, dinv)
+    system = (AtA, Aty, A_rm, y, rmask, cmask, lam_d)
+    valid = sel == 0
+    return shared, system, valid
+
+
+@pytest.mark.parametrize("R,M,C,block_r", [
+    (1120, 16, 7, 256),     # production shape (cap=160)
+    (224, 16, 7, 256),      # small cap, single padded tile
+    (448, 8, 7, 64),        # multi-tile, narrow candidate set
+    (1120, 32, 7, 128),     # wide candidate set (bench shape)
+    (200, 16, 4, 128),      # ragged rows (R % 8 != 0)
+])
+def test_loo_trials_kernel_vs_ref(R, M, C, block_r):
+    """Pallas interpret path == pure-jnp oracle on random systems."""
+    shared, _, _ = _bordering_inputs(R, M, C, seed=R + M)
+    out = loo_trials(*shared, block_r=block_r, interpret=True)
+    ref = loo_trials_ref(*shared)
+    err = float(jnp.max(jnp.abs(out - ref))) / (float(jnp.max(ref)) + 1e-9)
+    assert err < 2e-6, f"rel err={err}"
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_loo_trials_matches_inverse_formulation(seed):
+    """Cholesky-bordering objectives == the O(M D^3) inverse-based LOO the
+    kernel replaced, for every valid (not-yet-selected) candidate."""
+    shared, system, valid = _bordering_inputs(1120, 16, 7, seed)
+    AtA, Aty, A_rm, y, rmask, cmask, lam_d = system
+    ref = np.asarray(loo_trials_inv_reference(
+        jnp.asarray(AtA), jnp.asarray(Aty), jnp.asarray(A_rm),
+        jnp.asarray(y), jnp.asarray(rmask), jnp.asarray(cmask),
+        jnp.asarray(lam_d), 16))
+    fac = np.asarray(loo_trials_ref(*shared))
+    rel = np.abs(fac - ref)[valid] / np.maximum(np.abs(ref[valid]), 1e-6)
+    assert rel.max() < 1e-5, rel.max()
 
 
 def test_models_agree_xla_vs_pallas():
