@@ -6,42 +6,61 @@
    max-data and random election.
 3. Source-pool ablation: does including the previous global model as a
    GreedyTL source (the incremental mechanism) actually matter?
-4. Engine timing: the batched ``fleet`` engine (which ablations 1-2 run
+4. Collection-policy ablation: the paper's Poisson+Zipf arrivals vs the
+   registry's uniform / trace-replay / bursty policies at fixed energy
+   budget (same windows, same technologies).
+5. Engine timing: the batched ``fleet`` engine (which ablations 1-2 run
    on — policies resolve through repro.core.htl at call time, so the
    monkey-patches apply to both engines) vs the per-DC ``loop`` reference,
    seeds replica-stacked vs sequential. Timings land in ablations.json.
+
+Each sweep-shaped ablation is a declarative ``SweepSpec`` axis
+(:mod:`repro.core.experiment`); the monkey-patched ones wrap a spec run
+per policy variant.
 
     PYTHONPATH=src python -m benchmarks.ablations [--windows 40]
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import os
 import time
 
 import numpy as np
 
-from repro.core.scenario import ScenarioConfig, run_scenario, run_sweep
+from benchmarks.paper_tables import RESULTS_DIR
+from repro.core.experiment import SweepSpec
+from repro.core.scenario import ScenarioConfig
 from repro.data.synthetic_covtype import make_covtype_like
 
-RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
-                           "benchmarks")
+
+def _base(windows: int, **kw) -> ScenarioConfig:
+    return ScenarioConfig(algo="star", tech="wifi", windows=windows,
+                          eval_every=max(1, windows // 10), **kw)
 
 
 def ema_ablation(data, windows, seeds=2):
-    out = {}
-    for eta in (1.0, 0.5, 0.3, 0.15):
-        f1s = []
-        for s in range(seeds):
-            r = run_scenario(ScenarioConfig(
-                algo="star", tech="wifi", windows=windows,
-                eval_every=max(1, windows // 10), global_update_rate=eta,
-                seed=s), data)
-            f1s.append(r.converged_f1())
-        out[f"eta={eta}"] = round(float(np.mean(f1s)), 4)
-    return out
+    spec = SweepSpec("ema", base=_base(windows),
+                     axes={"global_update_rate": (1.0, 0.5, 0.3, 0.15)},
+                     label="eta={global_update_rate}").with_seeds(seeds)
+    res = spec.run(data, stack="auto")
+    return {lbl: round(res.summary(lbl)["f1"], 4) for lbl in res.labels()}
+
+
+def collection_ablation(data, windows, seeds=2):
+    """Arrival-process ablation over the collection-policy registry: the
+    same scenario under Zipf, uniform, deterministic trace replay, and
+    bursty arrivals."""
+    spec = SweepSpec(
+        "collection", base=_base(windows),
+        axes={"collection": ("poisson_zipf", "uniform",
+                             "trace:loads=60-25-15", "bursty:burst=8")},
+        label="{collection}").with_seeds(seeds)
+    res = spec.run(data, stack="auto")
+    return {lbl: {"f1": round(res.summary(lbl)["f1"], 4),
+                  "energy_mj": round(res.summary(lbl)["energy_mj"], 1)}
+            for lbl in res.labels()}
 
 
 def election_ablation(data, windows, seeds=2):
@@ -56,16 +75,12 @@ def election_ablation(data, windows, seeds=2):
         "random": lambda y, k: float(np.random.default_rng(len(y))
                                      .random()),
     }
+    spec = SweepSpec("election", base=_base(windows)).with_seeds(seeds)
     try:
         for name, fn in policies.items():
             htl_mod.label_entropy = fn
-            f1s = []
-            for s in range(seeds):
-                r = run_scenario(ScenarioConfig(
-                    algo="star", tech="wifi", windows=windows,
-                    eval_every=max(1, windows // 10), seed=s), data)
-                f1s.append(r.converged_f1())
-            out[name] = round(float(np.mean(f1s)), 4)
+            res = spec.run(data, stack="auto")
+            out[name] = round(res.summary("election")["f1"], 4)
     finally:
         htl_mod.label_entropy = orig
     return out
@@ -76,6 +91,9 @@ def prev_model_source_ablation(data, windows, seeds=2):
     import repro.core.htl as htl_mod
     out = {}
     orig_refine = htl_mod._greedy_refine
+    # _greedy_refine is a loop-engine internal; pin that engine
+    spec = SweepSpec("prev_src",
+                     base=_base(windows, engine="loop")).with_seeds(seeds)
 
     for label, drop in (("with prev-global source (ours)", False),
                         ("without prev-global source", True)):
@@ -85,15 +103,8 @@ def prev_model_source_ablation(data, windows, seeds=2):
                                    else sources, cap, num_classes)
             htl_mod._greedy_refine = patched
         try:
-            f1s = []
-            for s in range(seeds):
-                # _greedy_refine is a loop-engine internal; pin that engine
-                r = run_scenario(ScenarioConfig(
-                    algo="star", tech="wifi", windows=windows,
-                    eval_every=max(1, windows // 10), seed=s,
-                    engine="loop"), data)
-                f1s.append(r.converged_f1())
-            out[label] = round(float(np.mean(f1s)), 4)
+            res = spec.run(data, stack="off")
+            out[label] = round(res.summary("prev_src")["f1"], 4)
         finally:
             htl_mod._greedy_refine = orig_refine
     return out
@@ -107,17 +118,17 @@ def engine_timing(data, windows, seeds=3):
     """
     out = {}
     f1 = {}
-    for engine, stack in (("fleet", True), ("fleet", False),
-                          ("loop", False)):
-        cfgs = [ScenarioConfig(algo="star", tech="wifi", windows=windows,
-                               eval_every=max(1, windows // 10), seed=s,
-                               engine=engine) for s in range(seeds)]
-        run_sweep(cfgs, data, stack_seeds=stack)       # warm the jit cache
+    for engine, stack in (("fleet", "auto"), ("fleet", "off"),
+                          ("loop", "off")):
+        spec = SweepSpec(f"timing_{engine}",
+                         base=_base(windows, engine=engine)
+                         ).with_seeds(seeds)
+        spec.run(data, stack=stack)               # warm the jit cache
         t0 = time.time()
-        rs = run_sweep(cfgs, data, stack_seeds=stack)
-        label = f"{engine}_stacked" if stack else engine
+        res = spec.run(data, stack=stack)
+        label = f"{engine}_stacked" if stack == "auto" else engine
         out[f"{label}_s"] = round(time.time() - t0, 3)
-        f1[label] = round(float(np.mean([r.converged_f1() for r in rs])), 4)
+        f1[label] = round(res.summary(f"timing_{engine}")["f1"], 4)
     out["fleet_speedup_vs_loop"] = round(out["loop_s"] / out["fleet_s"], 2)
     out["stacking_speedup"] = round(out["fleet_s"] / out["fleet_stacked_s"],
                                     2)
@@ -134,6 +145,7 @@ def main():
     data = make_covtype_like(seed=0)
     out = {
         "ema_rate": ema_ablation(data, args.windows),
+        "collection_policy": collection_ablation(data, args.windows),
         "election": election_ablation(data, args.windows),
         "prev_model_source": prev_model_source_ablation(data, args.windows),
         "engine_timing": engine_timing(data, args.windows),

@@ -5,88 +5,27 @@ our own Edge-Only run (exactly how the paper computes its losses). Results
 are cached under results/benchmarks/ as JSON; ``--quick`` runs fewer windows
 and seeds for CI-speed smoke validation.
 
-The whole grid is built up front and evaluated by ONE
-:func:`~repro.core.scenario.run_sweep` call with ``stack_seeds=True``: every
-stack-compatible row x seed replica (same algorithm, any mix of seeds,
-technologies, p_edge, allocation and aggregation settings) runs in lockstep
-on a shared fleet axis, so the sweep pays O(sample buckets) jitted
-dispatches per window for a whole table column group instead of O(rows x
-seeds).
+The grid is the ``"paper_tables"`` :mod:`repro.core.experiment` preset —
+one declarative ``SweepSpec`` whose expansion matches the legacy
+hand-rolled row list config for config — evaluated by ONE
+``SweepSpec.run(stack="auto")`` call: every stack-compatible row x seed
+replica (same algorithm, any mix of seeds, technologies, p_edge,
+allocation and aggregation settings — derived from ``host_side`` field
+metadata) runs in lockstep on a shared fleet axis, so the sweep pays
+O(sample buckets) jitted dispatches per window for a whole table column
+group instead of O(rows x seeds).
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import time
 
-import numpy as np
-
-from repro.core.scenario import ScenarioConfig, run_sweep
+from repro.core.experiment import get_preset
 from repro.data.synthetic_covtype import make_covtype_like
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
                            "benchmarks")
-
-
-def _stats(results):
-    """Aggregate one row's seed replicas: converged F1 and energies."""
-    curves = [r.f1_curve for r in results]
-    return {
-        "f1": float(np.mean([r.converged_f1() for r in results])),
-        "f1_std": float(np.std([r.converged_f1() for r in results])),
-        "energy_mj": float(np.mean([r.energy_total for r in results])),
-        "collection_mj": float(np.mean([r.energy_collection
-                                        for r in results])),
-        "learning_mj": float(np.mean([r.energy_learning for r in results])),
-        "f1_curve": list(np.mean(np.array(curves), axis=0)),
-    }
-
-
-def _grid(base: ScenarioConfig):
-    """(label, config) pairs for every table row of the paper."""
-    rows = [("fig2_edge_only", dataclasses.replace(base, algo="edge_only"))]
-
-    # -- Table 2: partial data on the edge (StarHTL, 4G between DCs) --------
-    for frac, lbl in [(0.5, "50"), (0.15, "15"), (0.03, "3")]:
-        rows.append((f"table2_edge{lbl}pct",
-                     dataclasses.replace(base, algo="star", p_edge=frac,
-                                         tech="4g")))
-
-    # -- Table 3: no data on edge, Zipf, A2A/Star x 4G/WiFi ------------------
-    for algo in ("a2a", "star"):
-        for tech in ("4g", "wifi"):
-            rows.append((f"table3_{algo}_{tech}",
-                         dataclasses.replace(base, algo=algo, tech=tech)))
-
-    # -- Table 4: + data-aggregation heuristic (Zipf) ------------------------
-    for algo in ("a2a", "star"):
-        for tech in ("4g", "wifi"):
-            rows.append((f"table4_{algo}_{tech}_agg",
-                         dataclasses.replace(base, algo=algo, tech=tech,
-                                             aggregate=True)))
-
-    # -- Tables 5/6: uniform initial distribution ----------------------------
-    for algo in ("a2a", "star"):
-        for tech in ("4g", "wifi"):
-            rows.append((f"table5_{algo}_{tech}_uniform",
-                         dataclasses.replace(base, algo=algo, tech=tech,
-                                             uniform=True)))
-            rows.append((f"table6_{algo}_{tech}_uniform_agg",
-                         dataclasses.replace(base, algo=algo, tech=tech,
-                                             uniform=True, aggregate=True)))
-
-    # -- Tables 8/9: GreedyTL sub-sampling (computational complexity) --------
-    for n_sub in (2, 5, 10):
-        for algo in ("a2a", "star"):
-            rows.append((f"table8_{algo}_n{n_sub}",
-                         dataclasses.replace(base, algo=algo, tech="wifi",
-                                             n_subsample=n_sub)))
-            rows.append((f"table9_{algo}_n{n_sub}_uniform",
-                         dataclasses.replace(base, algo=algo, tech="wifi",
-                                             uniform=True,
-                                             n_subsample=n_sub)))
-    return rows
 
 
 def run_all(windows: int = 100, n_seeds: int = 3, quick: bool = False,
@@ -94,25 +33,21 @@ def run_all(windows: int = 100, n_seeds: int = 3, quick: bool = False,
     if quick:
         windows, n_seeds = 30, 1
     data = make_covtype_like(seed=0)
+    spec = get_preset("paper_tables", windows=windows, n_seeds=n_seeds,
+                      engine=engine)
     out = {"windows": windows, "n_seeds": n_seeds, "engine": engine}
 
-    base = ScenarioConfig(windows=windows, eval_every=max(1, windows // 20),
-                          engine=engine)
-    rows = _grid(base)
-
     t0 = time.time()
-    configs = [dataclasses.replace(cfg, seed=s)
-               for _, cfg in rows for s in range(n_seeds)]
-    print(f"sweeping {len(rows)} rows x {n_seeds} seed(s), {windows} "
+    print(f"sweeping {len(spec.rows())} rows x {n_seeds} seed(s), {windows} "
           f"windows, replica-stacked (rows print when the sweep returns)",
           flush=True)
-    results = run_sweep(configs, data, stack_seeds=True)
+    result = spec.run(data, stack="auto")
     out["sweep_seconds"] = round(time.time() - t0, 1)
     print(f"sweep done in {out['sweep_seconds']}s", flush=True)
 
     ref = None
-    for i, (label, _) in enumerate(rows):
-        r = _stats(results[i * n_seeds:(i + 1) * n_seeds])
+    for label in result.labels():
+        r = result.summary(label)
         if label == "fig2_edge_only":
             ref = r
         else:

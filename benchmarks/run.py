@@ -194,6 +194,59 @@ def bench_stacked_sweep(quick: bool):
     return rows
 
 
+def bench_sweep_api(quick: bool):
+    """Experiment-API smoke + timing: a tiny ``SweepSpec`` preset end to
+    end through ``SweepSpec.run``, asserting the ``SweepResult`` JSON
+    round-trip and parity with the legacy ``run_sweep`` shim, then writing
+    a timing row to results/benchmarks/sweep_api.json so the bench
+    trajectory starts populating."""
+    import numpy as np
+    from benchmarks.paper_tables import RESULTS_DIR
+    from repro.core.experiment import SweepResult, get_preset
+    from repro.core.scenario import run_sweep
+    from repro.data.synthetic_covtype import make_covtype_like
+
+    data = make_covtype_like(seed=0)
+    spec = get_preset("smoke", windows=4 if quick else 10)
+    spec.run(data, stack="auto")                 # warm both jit paths
+    spec.run(data, stack="off")
+    t0 = time.time()
+    result = spec.run(data, stack="auto")
+    stacked_us = (time.time() - t0) * 1e6
+    t0 = time.time()
+    spec.run(data, stack="off")
+    off_us = (time.time() - t0) * 1e6
+
+    roundtrip = SweepResult.from_json(result.to_json())
+    assert roundtrip == result, "SweepResult JSON round-trip drifted"
+
+    # deprecation-shim parity: the same run list through legacy run_sweep
+    legacy = run_sweep([c for _, c in spec.configs()], data,
+                       stack_seeds=True)
+    for rec, ref in zip(result.records, legacy):
+        assert rec.f1_curve == list(ref.f1_curve)
+        assert np.isclose(sum(e["mj"] for e in rec.events),
+                          ref.energy_total)
+
+    payload = {
+        "preset": "smoke",
+        "rows": len(spec.rows()),
+        "runs": len(result.records),
+        "windows": spec.configs()[0][1].windows,
+        "stacked_us": round(stacked_us, 1),
+        "sequential_us": round(off_us, 1),
+        "labels": result.labels(),
+        "converged_f1": {lbl: round(result.summary(lbl)["f1"], 4)
+                         for lbl in result.labels()},
+    }
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "sweep_api.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+    return [("sweep_api_smoke", stacked_us,
+             f"runs={payload['runs']} sequential_us={off_us:.0f} "
+             f"json_roundtrip=ok shim_parity=ok")]
+
+
 def bench_htl_trainer(quick: bool):
     """Paper's technique at LM scale: DCN traffic vs sync baseline."""
     import dataclasses
@@ -246,8 +299,9 @@ def main():
     args, _ = ap.parse_known_args()
 
     print("name,us_per_call,derived")
-    sections = [bench_greedytl, bench_fleet_engine, bench_stacked_sweep,
-                bench_kernels, bench_htl_trainer, bench_dryrun_summary]
+    sections = [bench_sweep_api, bench_greedytl, bench_fleet_engine,
+                bench_stacked_sweep, bench_kernels, bench_htl_trainer,
+                bench_dryrun_summary]
     if not args.skip_tables:
         sections.insert(
             0, functools.partial(bench_paper_tables, engine=args.engine))

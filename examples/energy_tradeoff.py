@@ -3,19 +3,20 @@ how much data reaches the edge server, which radio links the mules use, and
 the HTL variant. Prints a small ASCII table (the analogue of paper Fig. 3 +
 Tables 2-4).
 
-The whole grid goes through one :func:`repro.core.scenario.run_sweep` call
-with ``stack_seeds=True``, so stack-compatible configurations (same
-algorithm, any mix of technologies / p_edge / aggregation) run in lockstep
-on a shared fleet axis — O(sample buckets) jitted dispatches per window for
-each group — and every configuration reuses the batched fleet engine's
-jitted executables.
+The grid is the ``"energy_tradeoff"`` preset of the declarative experiment
+API (:mod:`repro.core.experiment`) evaluated by one
+``SweepSpec.run(stack="auto")`` call: stack-compatible configurations
+(same algorithm, any mix of technologies / p_edge / aggregation — derived
+from ``host_side`` config-field metadata) run in lockstep on a shared
+fleet axis, O(sample buckets) jitted dispatches per window per group.
+``--transports`` swaps in the mesh/BLE/LoRa technology grid over the
+parameterized transport registry instead.
 
     PYTHONPATH=src python examples/energy_tradeoff.py --windows 30
 """
 import argparse
-import dataclasses
 
-from repro.core.scenario import ScenarioConfig, run_sweep
+from repro.core.experiment import get_preset
 from repro.data.synthetic_covtype import make_covtype_like
 
 
@@ -23,37 +24,34 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--windows", type=int, default=30)
     ap.add_argument("--engine", default="fleet", choices=("fleet", "loop"))
+    ap.add_argument("--transports", action="store_true",
+                    help="sweep the mesh/BLE/LoRa transport grid instead")
     args = ap.parse_args()
     data = make_covtype_like(seed=0)
-    base = ScenarioConfig(windows=args.windows, engine=args.engine,
-                          eval_every=max(1, args.windows // 5))
 
-    grid = [("edge-only (NB-IoT)", dataclasses.replace(base,
-                                                       algo="edge_only"))]
-    for pe in (0.5, 0.15, 0.03):
-        grid.append((f"star 4g, {int(pe * 100)}% on edge",
-                     dataclasses.replace(base, algo="star", p_edge=pe)))
-    for algo in ("a2a", "star"):
-        for tech in ("4g", "wifi"):
-            grid.append((f"{algo} {tech}, 0% on edge",
-                         dataclasses.replace(base, algo=algo, tech=tech)))
-            grid.append((f"{algo} {tech} + aggregation",
-                         dataclasses.replace(base, algo=algo, tech=tech,
-                                             aggregate=True)))
+    preset = "transport_grid" if args.transports else "energy_tradeoff"
+    spec = get_preset(preset, windows=args.windows, engine=args.engine)
+    result = spec.run(data, stack="auto")
 
-    results = run_sweep([cfg for _, cfg in grid], data, stack_seeds=True)
-    rows = list(zip((name for name, _ in grid), results))
+    labels = result.labels()
+    if args.transports:
+        # reference for savings: the costliest technology in the grid
+        ref_label = max(labels,
+                        key=lambda l: result.summary(l)["energy_mj"])
+    else:
+        ref_label = labels[0]                      # edge-only row
+    ref = result.summary(ref_label)
+    e0, f0 = ref["energy_mj"], ref["f1"]
 
-    edge = rows[0][1]
-    e0, f0 = edge.energy_total, edge.converged_f1()
     print(f"{'configuration':28s} {'energy mJ':>10s} {'saving':>7s} "
           f"{'F1':>6s} {'loss':>6s}")
-    for name, r in rows:
-        sav = 100 * (1 - r.energy_total / e0)
-        loss = 100 * (f0 - r.converged_f1()) / f0
+    for label in labels:
+        r = result.summary(label)
+        sav = 100 * (1 - r["energy_mj"] / e0)
+        loss = 100 * (f0 - r["f1"]) / max(f0, 1e-9)
         bar = "#" * int(max(0.0, sav) // 4)
-        print(f"{name:28s} {r.energy_total:10.0f} {sav:6.1f}% "
-              f"{r.converged_f1():6.3f} {loss:5.1f}%  {bar}")
+        print(f"{label:28s} {r['energy_mj']:10.0f} {sav:6.1f}% "
+              f"{r['f1']:6.3f} {loss:5.1f}%  {bar}")
 
 
 if __name__ == "__main__":

@@ -16,4 +16,9 @@ python -m pytest -x -q "${MARK[@]}"
 # per-DC / per-replica loops (redundant with the suite above, but kept as
 # an explicit, individually-runnable CI gate)
 python -m pytest -q tests/test_dispatch_gate.py
+# experiment-API gate: SweepSpec preset == legacy grid config-for-config,
+# legacy run_sweep shim emits identical results, SweepResult JSON
+# round-trips (also exercised end-to-end by bench_sweep_api below, which
+# runs a tiny preset and writes results/benchmarks/sweep_api.json)
+python -m pytest -q tests/test_experiment.py
 python -m benchmarks.run --quick --skip-tables

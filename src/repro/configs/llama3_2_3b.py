@@ -4,7 +4,7 @@
 
 long_500k: the base config is full attention; the dry-run uses a documented
 sliding-window variant (window=8192) so this dense arch can also exercise the
-long-context decode shape (beyond-paper addition, see DESIGN.md §5).
+long-context decode shape (beyond-paper addition, see DESIGN.md §6).
 """
 from repro.configs.base import ModelConfig, register
 

@@ -2,17 +2,32 @@
 energy accounting (faithful layer), plus the datacenter-scale hypothesis-
 transfer trainer (`htl_trainer`, the TPU-native adaptation — DESIGN.md §3).
 """
-from repro.core.energy import Ledger, TECHS, MODEL_BYTES, OBS_BYTES  # noqa: F401
+from repro.core.energy import (  # noqa: F401
+    Ledger,
+    TECHS,
+    MODEL_BYTES,
+    OBS_BYTES,
+    resolve_tech,
+)
 from repro.core.htl import DC, run_window_a2a, run_window_star  # noqa: F401
 from repro.core.topology import (  # noqa: F401
     Node,
     Topology,
-    TRANSPORTS,
+    TRANSPORT_FACTORIES,
+    get_transport,
+    register_transport,
     transfer_counts,
 )
 from repro.core.scenario import (  # noqa: F401
+    COLLECTION_POLICIES,
     ScenarioConfig,
     ScenarioResult,
+    register_collection_policy,
     run_scenario,
     run_sweep,
+)
+from repro.core.experiment import (  # noqa: F401
+    SweepSpec,
+    SweepResult,
+    get_preset,
 )

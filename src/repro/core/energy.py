@@ -26,6 +26,8 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List
 
+from repro.core.registry import resolve_spec
+
 
 @dataclass(frozen=True)
 class Tech:
@@ -42,13 +44,78 @@ class Tech:
         return self.rx_mw * (nbytes * 8.0 / (self.down_mbps * 1e6))
 
 
-# Table 1 of the paper
+def lora_bitrate_mbps(sf: int, bw_khz: float = 125.0,
+                      code_rate: float = 0.8) -> float:
+    """LoRa PHY bitrate for spreading factor ``sf`` (EU868 defaults:
+    125 kHz bandwidth, CR 4/5): ``sf * BW / 2**sf * CR`` — SF7 ~= 5.5 kbps,
+    SF12 ~= 0.29 kbps. Higher SF buys range at a steep energy-per-byte
+    cost, which is exactly the trade-off ``"lora:sf=N"`` sweeps expose."""
+    if sf != int(sf) or not 7 <= int(sf) <= 12:
+        raise ValueError(f"LoRa spreading factor must be an integer in "
+                         f"7..12, got {sf}")
+    sf = int(sf)
+    return float(sf) * (bw_khz * 1e3) / (2.0 ** sf) * code_rate / 1e6
+
+
+def _lora_tech(sf: int = 7) -> Tech:
+    # SX127x-class transceiver at +14 dBm / 3.3 V: ~44 mA tx, ~12 mA rx
+    rate = lora_bitrate_mbps(sf)
+    return Tech(f"lora:sf={int(sf)}" if int(sf) != 7 else "lora",
+                145.2, rate, 39.6, rate)
+
+
+def _mesh_tech(hops: int = 1) -> Tech:
+    """Per-event energy of a ``"mesh:hops=N"`` spec: hop count multiplies
+    *event counts* (:class:`repro.core.topology.MeshTransport`), never the
+    per-event energy, so every mesh depth shares the 802.15.4 entry. The
+    hop count is validated here too so the direct ``Ledger.add`` path
+    fails as fast as the transport registry."""
+    if isinstance(hops, bool) or hops != int(hops) or int(hops) < 1:
+        raise ValueError(f"mesh hop count must be a positive integer, "
+                         f"got {hops!r}")
+    return TECHS["802.15.4"]
+
+
+# Table 1 of the paper, plus the BLE/LoRa additions (DESIGN.md §5):
+# BLE 4.x connection events ~= 0.27 Mbps application throughput at
+# ~10 mA tx / 9 mA rx on 3.6 V coin-cell class radios.
 TECHS: Dict[str, Tech] = {
     "4g": Tech("4g", 2100.0, 75.0, 2100.0, 35.0),
     "nbiot": Tech("nbiot", 199.0, 0.2, 199.52, 0.2),
     "802.15.4": Tech("802.15.4", 3.0, 0.12, 3.0, 0.12),
     "wifi": Tech("wifi", 1080.0, 48.0, 740.0, 48.0),
+    "ble": Tech("ble", 36.0, 0.27, 32.4, 0.27),
+    "lora": _lora_tech(),
 }
+
+
+# Parameterized technologies: factories keyed by spec name, resolved (and
+# cached, outside the static paper-constant TECHS table) through the same
+# registry machinery as transports and collection policies.
+TECH_FACTORIES: Dict[str, object] = {
+    "mesh": _mesh_tech,
+    "lora": _lora_tech,
+}
+
+_TECH_CACHE: Dict[str, Tech] = {}
+
+
+def resolve_tech(spec: str) -> Tech:
+    """Per-event energy model for a technology *spec string*.
+
+    Flat names resolve straight from :data:`TECHS`. Parameterized specs
+    resolve through :data:`TECH_FACTORIES` and the shared spec grammar
+    (:mod:`repro.core.registry`): ``"lora:sf=12"`` builds (and caches)
+    the SF-dependent LoRa entry, ``"mesh:hops=N"`` reuses the 802.15.4
+    per-event energies — hop count multiplies *event counts*, not the
+    per-event energy, and lives in
+    :class:`repro.core.topology.MeshTransport`. Raises :class:`KeyError`
+    for unknown technologies/parameters (matching the transport registry)
+    and :class:`ValueError` for invalid parameter values."""
+    tech = TECHS.get(spec)
+    if tech is not None:
+        return tech
+    return resolve_spec(spec, TECH_FACTORIES, _TECH_CACHE, "technology")
 
 OBS_BYTES = 54 * 8 + 1        # 433 B (calibrated, DESIGN.md §2)
 MODEL_BYTES = 55 * 7 * 4      # 1 540 B linear model, float32
@@ -61,7 +128,7 @@ class Ledger:
 
     def add(self, tech: str, nbytes: float, *, purpose: str,
             n_tx: int = 1, n_rx: int = 1, what: str = "") -> float:
-        t = TECHS[tech]
+        t = resolve_tech(tech)
         mj = n_tx * t.tx_mj(nbytes) + n_rx * t.rx_mj(nbytes)
         self.events.append({"tech": tech, "bytes": nbytes, "purpose": purpose,
                             "n_tx": n_tx, "n_rx": n_rx, "mj": mj,

@@ -1,0 +1,436 @@
+"""Experiment API v1: declarative sweeps over scenario grids.
+
+The paper's results are a grid — algorithm x technology x offload fraction
+x allocation policy (Tables 2-6) — and every driver in this repo
+(benchmarks, ablations, examples, CI smoke) is some slice of such a grid.
+This module gives that surface a declarative form:
+
+* :class:`SweepSpec` — named axes over a base :class:`ScenarioConfig`,
+  expanded cartesian (nested-loop order) or zipped, with per-row label
+  templates, row ``variants`` (an innermost axis of label/override pairs),
+  seed replication and union composition, so a whole paper table is one
+  literal instead of a hand-rolled loop nest.
+* :class:`SweepResult` — the typed result: one :class:`RunRecord` per
+  (label, seed) run carrying the full F1 curve and energy-event ledger,
+  with JSON round-trip serialization and per-label summary statistics
+  (the aggregation previously re-implemented ad hoc by every benchmark).
+* named presets (:func:`get_preset`) — the paper's Tables 2-6 grid
+  (``"paper_tables"``), the energy/accuracy trade-off example grid, a CI
+  smoke grid, and a mesh/BLE/LoRa technology grid over the parameterized
+  transport registry.
+
+``SweepSpec.run(data, stack="auto")`` evaluates the grid through
+:func:`repro.core.scenario.run_sweep` with metadata-driven replica
+stacking (configs differing only in ``host_side`` fields share one
+dispatch set per window); ``run_scenario``/``run_sweep`` remain as the
+thin compatibility layer underneath, so the two paths are value-identical
+by construction (tests/test_experiment.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+from dataclasses import dataclass, field
+from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
+                    Tuple)
+
+import numpy as np
+
+from repro.core.energy import Ledger
+from repro.core.scenario import (ScenarioConfig, ScenarioResult, run_sweep,
+                                 validate_config)
+from repro.data.synthetic_covtype import Dataset
+
+LABEL_AXIS = "_label"     # reserved zip-axis name: explicit per-row labels
+
+
+# ---------------------------------------------------------------------------
+# SweepSpec
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SweepSpec:
+    """A declarative scenario grid.
+
+    ``axes`` maps config-field names to value tuples; ``mode="cartesian"``
+    expands their product in declaration order (first axis outermost,
+    exactly a nested ``for`` loop), ``mode="zip"`` walks them in lockstep.
+    The reserved axis ``"_label"`` (zip mode) gives explicit row labels;
+    otherwise ``label`` is a ``str.format`` template over the axis values,
+    falling back to ``name_axis=value_...``. ``variants`` is an innermost
+    axis of ``(label_template, {field: value})`` pairs — the idiom for
+    paired table rows like "same cell with and without aggregation".
+    ``seeds`` replicates every expanded row (seeds innermost, matching the
+    legacy benchmark layout); empty means "keep each row's own seed".
+    Specs compose by union (:meth:`union`), which simply concatenates
+    expansions.
+    """
+
+    name: str = "sweep"
+    base: ScenarioConfig = field(default_factory=ScenarioConfig)
+    axes: Any = ()                  # Mapping | tuple of (name, values)
+    mode: str = "cartesian"         # 'cartesian' | 'zip'
+    label: str = ""
+    variants: Tuple[Tuple[str, Any], ...] = ()
+    seeds: Tuple[int, ...] = ()
+    subspecs: Tuple["SweepSpec", ...] = ()
+
+    def __post_init__(self):
+        axes = self.axes
+        if isinstance(axes, Mapping):
+            axes = tuple((k, tuple(v)) for k, v in axes.items())
+        else:
+            axes = tuple((k, tuple(v)) for k, v in axes)
+        object.__setattr__(self, "axes", axes)
+        object.__setattr__(self, "seeds", tuple(self.seeds))
+        object.__setattr__(
+            self, "variants",
+            tuple((tmpl, dict(ov)) for tmpl, ov in self.variants))
+        if self.mode not in ("cartesian", "zip"):
+            raise ValueError(f"unknown sweep mode {self.mode!r} "
+                             f"(want 'cartesian' or 'zip')")
+        if self.subspecs and self.axes:
+            raise ValueError("a union SweepSpec cannot carry its own axes")
+        names = [n for n, _ in self.axes]
+        cfg_fields = {f.name for f in dataclasses.fields(ScenarioConfig)}
+        for n in names:
+            if n != LABEL_AXIS and n not in cfg_fields:
+                raise ValueError(f"unknown sweep axis {n!r}; ScenarioConfig "
+                                 f"fields: {sorted(cfg_fields)}")
+        if names.count(LABEL_AXIS) and self.mode != "zip":
+            raise ValueError("the _label axis requires mode='zip'")
+        if self.mode == "zip" and self.axes:
+            lens = {len(v) for _, v in self.axes}
+            if len(lens) > 1:
+                raise ValueError(f"zip-mode axes must have equal lengths, "
+                                 f"got {dict((n, len(v)) for n, v in self.axes)}")
+
+    # -- composition --------------------------------------------------------
+    @classmethod
+    def union(cls, name: str, *specs: "SweepSpec",
+              seeds: Sequence[int] = ()) -> "SweepSpec":
+        """Concatenate several specs into one grid (expansion order is the
+        argument order); ``seeds`` replicates every row of the union.
+        Subspecs must not carry their own seeds — expansion works on
+        logical rows, so nested seed replication would be silently
+        dropped; declare seeds once, on the union."""
+        seeded = [s.name for s in specs if s.seeds]
+        if seeded:
+            raise ValueError(f"subspec(s) {seeded} carry their own seeds; "
+                             f"set seeds on the union instead")
+        return cls(name=name, subspecs=tuple(specs), seeds=tuple(seeds))
+
+    def with_seeds(self, n_or_seeds) -> "SweepSpec":
+        """``3`` -> seeds (0, 1, 2); a sequence is taken verbatim."""
+        seeds = (tuple(range(n_or_seeds)) if isinstance(n_or_seeds, int)
+                 else tuple(n_or_seeds))
+        return dataclasses.replace(self, seeds=seeds)
+
+    # -- expansion ----------------------------------------------------------
+    def rows(self) -> List[Tuple[str, ScenarioConfig]]:
+        """The logical grid: ``(label, config)`` per row, seeds NOT yet
+        replicated. Labels must be unique across the whole grid."""
+        out = self._expand()
+        seen: Dict[str, int] = {}
+        for lbl, _ in out:
+            seen[lbl] = seen.get(lbl, 0) + 1
+        dups = sorted(lbl for lbl, k in seen.items() if k > 1)
+        if dups:
+            raise ValueError(f"duplicate sweep labels {dups}; make the "
+                             f"label template mention every varying axis")
+        return out
+
+    def _expand(self) -> List[Tuple[str, ScenarioConfig]]:
+        if self.subspecs:
+            return [row for s in self.subspecs for row in s._expand()]
+        names = [n for n, _ in self.axes]
+        values = [v for _, v in self.axes]
+        if not names:
+            combos = [()]
+        elif self.mode == "zip":
+            combos = list(zip(*values))
+        else:
+            combos = list(itertools.product(*values))
+        variants = self.variants or ((self.label, {}),)
+        out: List[Tuple[str, ScenarioConfig]] = []
+        for vals in combos:
+            point = dict(zip(names, vals))
+            explicit = point.pop(LABEL_AXIS, None)
+            for tmpl, overrides in variants:
+                cfg = dataclasses.replace(self.base, **point, **overrides)
+                if explicit is not None:
+                    lbl = str(explicit)
+                elif tmpl:
+                    lbl = tmpl.format(**point)
+                else:
+                    lbl = "_".join([self.name] + [f"{k}={v}"
+                                                  for k, v in point.items()])
+                out.append((lbl, cfg))
+        return out
+
+    def configs(self) -> List[Tuple[str, ScenarioConfig]]:
+        """The physical run list: rows replicated over ``seeds`` (seeds
+        innermost — ``row0/seed0, row0/seed1, row1/seed0, ...``)."""
+        rows = self.rows()
+        if not self.seeds:
+            return rows
+        return [(lbl, dataclasses.replace(cfg, seed=s))
+                for lbl, cfg in rows for s in self.seeds]
+
+    # -- execution ----------------------------------------------------------
+    def run(self, data: Dataset, *, stack: str = "auto") -> "SweepResult":
+        """Evaluate the grid. ``stack="auto"`` runs metadata-derived
+        stack-compatible groups replica-stacked (one dispatch set per
+        window per group); ``stack="off"`` runs every config
+        sequentially. Both go through the same engines, so they agree to
+        the engine-parity tolerance."""
+        if stack not in ("auto", "off"):
+            raise ValueError(f"stack must be 'auto' or 'off', got {stack!r}")
+        runs = self.configs()
+        for _, cfg in runs:
+            validate_config(cfg)
+        results = run_sweep([cfg for _, cfg in runs], data,
+                            stack_seeds=(stack == "auto"))
+        records = [RunRecord(label=lbl, cfg=r.cfg, f1_curve=list(r.f1_curve),
+                             events=list(r.ledger.events))
+                   for (lbl, _), r in zip(runs, results)]
+        return SweepResult(name=self.name, records=records)
+
+
+# ---------------------------------------------------------------------------
+# SweepResult
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RunRecord:
+    """One (label, seed) run: config, F1 curve, full energy-event ledger."""
+    label: str
+    cfg: ScenarioConfig
+    f1_curve: List[float]
+    events: List[dict]
+
+    def to_scenario_result(self) -> ScenarioResult:
+        return ScenarioResult(list(self.f1_curve), Ledger(list(self.events)),
+                              self.cfg)
+
+
+@dataclass
+class SweepResult:
+    """Structured sweep output: per-run records + per-label aggregation.
+
+    JSON round-trips losslessly (``from_json(r.to_json()) == r``), so
+    benchmark outputs become reloadable artifacts instead of write-only
+    dicts."""
+    name: str
+    records: List[RunRecord]
+    _summaries: Dict[str, Dict[str, Any]] = field(
+        default_factory=dict, compare=False, repr=False)
+    SCHEMA = 1
+
+    def labels(self) -> List[str]:
+        """Unique labels, first-appearance order."""
+        out, seen = [], set()
+        for r in self.records:
+            if r.label not in seen:
+                seen.add(r.label)
+                out.append(r.label)
+        return out
+
+    def select(self, label: str) -> List[ScenarioResult]:
+        rs = [r.to_scenario_result() for r in self.records
+              if r.label == label]
+        if not rs:
+            raise KeyError(f"no runs labelled {label!r}; have "
+                           f"{self.labels()}")
+        return rs
+
+    def summary(self, label: str) -> Dict[str, Any]:
+        """Aggregate a label's seed replicas: converged F1 (mean/std over
+        seeds), mean energies by purpose, mean F1 curve — the row format
+        of the paper-table benchmarks. Memoized per label (records are
+        immutable in practice); callers get a fresh shallow copy, so
+        annotating the returned dict never pollutes the cache."""
+        cached = self._summaries.get(label)
+        if cached is None:
+            rs = self.select(label)
+            curves = np.array([r.f1_curve for r in rs])
+            cached = self._summaries[label] = {
+                "f1": float(np.mean([r.converged_f1() for r in rs])),
+                "f1_std": float(np.std([r.converged_f1() for r in rs])),
+                "energy_mj": float(np.mean([r.energy_total for r in rs])),
+                "collection_mj": float(np.mean([r.energy_collection
+                                                for r in rs])),
+                "learning_mj": float(np.mean([r.energy_learning
+                                              for r in rs])),
+                "f1_curve": [float(v) for v in curves.mean(axis=0)],
+            }
+        return dict(cached)
+
+    def summaries(self) -> Dict[str, Dict[str, Any]]:
+        return {lbl: self.summary(lbl) for lbl in self.labels()}
+
+    # -- serialization ------------------------------------------------------
+    def to_json(self, path: Optional[str] = None, *, indent: int = 1) -> str:
+        payload = {
+            "schema": self.SCHEMA,
+            "name": self.name,
+            "records": [{
+                "label": r.label,
+                "cfg": dataclasses.asdict(r.cfg),
+                "f1_curve": [float(v) for v in r.f1_curve],
+                "events": r.events,
+            } for r in self.records],
+        }
+        text = json.dumps(payload, indent=indent)
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(text)
+        return text
+
+    @classmethod
+    def from_json(cls, text: str) -> "SweepResult":
+        payload = json.loads(text)
+        if payload.get("schema") != cls.SCHEMA:
+            raise ValueError(f"unsupported SweepResult schema "
+                             f"{payload.get('schema')!r} "
+                             f"(this build reads {cls.SCHEMA})")
+        records = [RunRecord(label=r["label"],
+                             cfg=ScenarioConfig(**r["cfg"]),
+                             f1_curve=list(r["f1_curve"]),
+                             events=list(r["events"]))
+                   for r in payload["records"]]
+        return cls(name=payload["name"], records=records)
+
+    @classmethod
+    def load(cls, path: str) -> "SweepResult":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+
+# ---------------------------------------------------------------------------
+# named presets
+# ---------------------------------------------------------------------------
+
+PRESETS: Dict[str, Callable[..., SweepSpec]] = {}
+
+
+def register_preset(name: str):
+    def deco(fn):
+        if name in PRESETS and PRESETS[name] is not fn:
+            raise ValueError(f"preset {name!r} already registered")
+        PRESETS[name] = fn
+        return fn
+    return deco
+
+
+def get_preset(name: str, **overrides) -> SweepSpec:
+    """Build a named preset grid; ``overrides`` are the preset's knobs
+    (typically ``windows=``, ``n_seeds=``, ``engine=``)."""
+    if name not in PRESETS:
+        raise KeyError(f"no preset named {name!r}; known: "
+                       f"{sorted(PRESETS)}")
+    return PRESETS[name](**overrides)
+
+
+@register_preset("paper_tables")
+def _paper_tables(windows: int = 100, n_seeds: int = 3,
+                  engine: str = "fleet") -> SweepSpec:
+    """The paper's full result grid (Fig. 2 + Tables 2-6, 8-9), one row
+    per table cell, labels exactly as results/benchmarks/paper_tables.json
+    keys. Expansion order matches the legacy hand-rolled grid row for row,
+    so the run list — and therefore the replica-stacking group layout —
+    is unchanged."""
+    base = ScenarioConfig(windows=windows, eval_every=max(1, windows // 20),
+                          engine=engine)
+    b = lambda **kw: dataclasses.replace(base, **kw)       # noqa: E731
+    return SweepSpec.union(
+        "paper_tables",
+        SweepSpec("fig2", base=b(algo="edge_only"), label="fig2_edge_only"),
+        # Table 2: partial data on the edge (StarHTL, 4G between DCs)
+        SweepSpec("table2", base=b(algo="star", tech="4g"), mode="zip",
+                  axes={"p_edge": (0.5, 0.15, 0.03),
+                        LABEL_AXIS: ("table2_edge50pct", "table2_edge15pct",
+                                     "table2_edge3pct")}),
+        # Table 3: no data on edge, Zipf, A2A/Star x 4G/WiFi
+        SweepSpec("table3", base=base,
+                  axes={"algo": ("a2a", "star"), "tech": ("4g", "wifi")},
+                  label="table3_{algo}_{tech}"),
+        # Table 4: + data-aggregation heuristic (Zipf)
+        SweepSpec("table4", base=b(aggregate=True),
+                  axes={"algo": ("a2a", "star"), "tech": ("4g", "wifi")},
+                  label="table4_{algo}_{tech}_agg"),
+        # Tables 5/6: uniform initial distribution, +/- aggregation
+        SweepSpec("table56", base=b(uniform=True),
+                  axes={"algo": ("a2a", "star"), "tech": ("4g", "wifi")},
+                  variants=(("table5_{algo}_{tech}_uniform", {}),
+                            ("table6_{algo}_{tech}_uniform_agg",
+                             {"aggregate": True}))),
+        # Tables 8/9: GreedyTL sub-sampling (computational complexity)
+        SweepSpec("table89", base=b(tech="wifi"),
+                  axes={"n_subsample": (2, 5, 10), "algo": ("a2a", "star")},
+                  variants=(("table8_{algo}_n{n_subsample}", {}),
+                            ("table9_{algo}_n{n_subsample}_uniform",
+                             {"uniform": True}))),
+        seeds=range(n_seeds),
+    )
+
+
+@register_preset("energy_tradeoff")
+def _energy_tradeoff(windows: int = 30, engine: str = "fleet") -> SweepSpec:
+    """The examples/energy_tradeoff.py grid: edge-only reference, partial
+    offload, and the HTL variants with/without aggregation."""
+    base = ScenarioConfig(windows=windows, engine=engine,
+                          eval_every=max(1, windows // 5))
+    b = lambda **kw: dataclasses.replace(base, **kw)       # noqa: E731
+    return SweepSpec.union(
+        "energy_tradeoff",
+        SweepSpec("edge", base=b(algo="edge_only"),
+                  label="edge-only (NB-IoT)"),
+        SweepSpec("partial", base=b(algo="star"), mode="zip",
+                  axes={"p_edge": (0.5, 0.15, 0.03),
+                        LABEL_AXIS: ("star 4g, 50% on edge",
+                                     "star 4g, 15% on edge",
+                                     "star 4g, 3% on edge")}),
+        SweepSpec("htl", base=base,
+                  axes={"algo": ("a2a", "star"), "tech": ("4g", "wifi")},
+                  variants=(("{algo} {tech}, 0% on edge", {}),
+                            ("{algo} {tech} + aggregation",
+                             {"aggregate": True}))),
+    )
+
+
+@register_preset("transport_grid")
+def _transport_grid(windows: int = 30, n_seeds: int = 1,
+                    engine: str = "fleet") -> SweepSpec:
+    """Beyond-paper technology grid over the parameterized transport
+    registry (ROADMAP: mesh/BLE/LoRa): multi-hop 802.15.4 mesh depths vs
+    BLE vs LoRa spreading factors, for both HTL variants."""
+    base = ScenarioConfig(windows=windows, eval_every=max(1, windows // 5),
+                          engine=engine)
+    return SweepSpec(
+        "transport_grid", base=base,
+        axes={"algo": ("a2a", "star"),
+              "tech": ("mesh:hops=1", "mesh:hops=2", "mesh:hops=3",
+                       "ble", "lora:sf=7", "lora:sf=12")},
+        label="{algo}_{tech}").with_seeds(n_seeds)
+
+
+@register_preset("smoke")
+def _smoke(windows: int = 6, n_seeds: int = 2,
+           engine: str = "fleet") -> SweepSpec:
+    """Tiny CI grid (scripts/verify.sh): one stackable HTL pair per
+    algorithm plus a mesh row, small enough for the verify budget but
+    wide enough to cross a stacking-group boundary."""
+    base = ScenarioConfig(windows=windows, eval_every=max(1, windows // 3),
+                          engine=engine)
+    return SweepSpec.union(
+        "smoke",
+        SweepSpec("smoke_star", base=base,
+                  axes={"tech": ("4g", "mesh:hops=2")},
+                  label="star_{tech}"),
+        SweepSpec("smoke_a2a",
+                  base=dataclasses.replace(base, algo="a2a", tech="wifi"),
+                  label="a2a_wifi"),
+        seeds=range(n_seeds),
+    )

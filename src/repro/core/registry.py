@@ -1,0 +1,111 @@
+"""Spec-string grammar shared by the experiment-facing registries.
+
+Transports, radio technologies and collection policies are all addressed by
+*spec strings* of the form
+
+    name
+    name:key=value
+    name:key=value,key2=value2
+
+(DESIGN.md §5) so a whole experiment variant fits in one `ScenarioConfig`
+string field and sweeps stay declarative — ``"mesh:hops=3"``,
+``"lora:sf=12"``, ``"bursty:burst=8"``. This module owns the grammar:
+:func:`parse_spec` splits a spec into ``(name, params)`` with numeric/bool
+coercion, and :func:`format_spec` renders the canonical form back
+(sorted keys), so ``format_spec(*parse_spec(s))`` is a stable round-trip
+for any valid spec.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+
+def _coerce(raw: str) -> Any:
+    """int | float | bool | str, in that order of preference."""
+    low = raw.strip().lower()
+    if low in ("true", "false"):
+        return low == "true"
+    try:
+        return int(raw)
+    except ValueError:
+        pass
+    try:
+        return float(raw)
+    except ValueError:
+        pass
+    return raw.strip()
+
+
+def parse_spec(spec: str) -> Tuple[str, Dict[str, Any]]:
+    """``"mesh:hops=3,paywall=false"`` -> ``("mesh", {"hops": 3, ...})``.
+
+    The bare form ``"mesh"`` parses to ``("mesh", {})``. Raises
+    :class:`ValueError` on malformed parameter segments (missing ``=``,
+    empty key), so registries can surface the offending spec verbatim.
+    """
+    if not isinstance(spec, str) or not spec.strip():
+        raise ValueError(f"empty transport/policy spec: {spec!r}")
+    name, sep, tail = spec.partition(":")
+    name = name.strip()
+    params: Dict[str, Any] = {}
+    if sep and not tail.strip():
+        raise ValueError(f"spec {spec!r} has a ':' but no parameters")
+    if tail.strip():
+        for part in tail.split(","):
+            key, eq, val = part.partition("=")
+            if not eq or not key.strip() or not val.strip():
+                raise ValueError(
+                    f"malformed parameter {part!r} in spec {spec!r} "
+                    f"(expected key=value)")
+            params[key.strip()] = _coerce(val)
+    return name, params
+
+
+def format_spec(name: str, params: Dict[str, Any] | None = None) -> str:
+    """Canonical spec string: params sorted by key, bools lowercase."""
+    if not params:
+        return name
+    def render(v: Any) -> str:
+        if isinstance(v, bool):
+            return "true" if v else "false"
+        return str(v)
+    body = ",".join(f"{k}={render(params[k])}" for k in sorted(params))
+    return f"{name}:{body}"
+
+
+def register_factory(registry: Dict[str, Any], name: str, factory: Any,
+                     kind: str) -> None:
+    """Shared registration rule: idempotent for the same factory object,
+    :class:`ValueError` on a conflicting re-registration."""
+    prev = registry.get(name)
+    if prev is not None and prev is not factory:
+        raise ValueError(f"{kind} {name!r} already registered")
+    registry[name] = factory
+
+
+def resolve_spec(spec: str, factories: Dict[str, Any],
+                 cache: Dict[str, Any], kind: str) -> Any:
+    """Shared spec-string resolution: parse → look up factory → construct
+    with the params as kwargs → cache under both the given and the
+    canonical spelling. Unknown names, malformed specs and unknown
+    parameter *names* raise :class:`KeyError` (fail-fast registries);
+    invalid parameter *values* propagate as the factory's
+    :class:`ValueError`."""
+    obj = cache.get(spec)
+    if obj is not None:
+        return obj
+    try:
+        name, params = parse_spec(spec)
+    except ValueError as e:
+        raise KeyError(str(e)) from e
+    factory = factories.get(name)
+    if factory is None:
+        raise KeyError(f"no {kind} registered for {spec!r}; known: "
+                       f"{sorted(factories)}")
+    try:
+        obj = factory(**params)
+    except TypeError as e:
+        raise KeyError(f"bad parameters for {kind} {spec!r}: {e}") from e
+    cache[spec] = obj
+    cache.setdefault(format_spec(name, params), obj)
+    return obj

@@ -13,24 +13,41 @@ The per-window pipeline is decomposed into composable phases —
     collection policy -> learning round -> global EMA update -> eval
 
 — each a module-level function, so alternative policies (engines,
-topologies, collection schemes) compose without touching the driver. The
-learning round runs on one of two engines: ``"fleet"`` (default,
+topologies, collection schemes) compose without touching the driver.
+Collection policies are a spec-string registry
+(:data:`COLLECTION_POLICIES`, mirroring the transport registry in
+:mod:`repro.core.topology`): builtin ``poisson_zipf`` (the paper's
+process), ``uniform`` (Scenario 3), ``trace`` (deterministic replay of a
+recorded per-mule allocation) and ``bursty`` (contiguous arrival runs).
+The learning round runs on one of two engines: ``"fleet"`` (default,
 O(1) jitted dispatches per window, :mod:`repro.core.fleet`) or ``"loop"``
 (the per-DC reference, :mod:`repro.core.htl`); they are numerically
 interchangeable (tests/test_fleet_engine.py).
 
 :func:`run_sweep` evaluates many configurations while sharing the jitted
 fleet trainers across them — the core workload of the paper's Tables 2-6.
-With ``stack_seeds=True`` it additionally runs all seed replicas of a
-configuration in lockstep, stacking them into the fleet DC axis so one
-jitted dispatch per window serves every seed (per-seed energy ledgers and
-rng streams stay separate — :func:`run_scenarios_stacked`).
+With ``stack_seeds=True`` it additionally runs all stack-compatible
+replicas of a configuration in lockstep, stacking them into the fleet DC
+axis so one jitted dispatch per window serves every seed (per-seed energy
+ledgers and rng streams stay separate — :func:`run_scenarios_stacked`).
+Stack compatibility is *derived from field metadata*: every
+:class:`ScenarioConfig` field tagged ``host_side`` steers only host-side
+work (collection rng, energy charging, GreedyTL subsampling inputs, EMA
+rate), never the shapes or semantics of the jitted calls, so
+:func:`_stack_key` normalizes exactly those fields — new fields declare
+their stacking behavior where they are defined.
+
+This module is the scenario *engine room*; the declarative experiment
+surface (``SweepSpec`` axes / presets / ``SweepResult``) lives in
+:mod:`repro.core.experiment`, and :func:`run_scenario` / :func:`run_sweep`
+remain as its thin compatibility layer.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +58,7 @@ from repro.core import htl as loop_engine
 from repro.core.energy import Ledger
 from repro.core.htl import DC, apply_aggregation_heuristic
 from repro.core.metrics import f_measure
+from repro.core.registry import register_factory, resolve_spec
 from repro.core.svm import pad_local, svm_predict, train_svm
 from repro.data.synthetic_covtype import Dataset, NUM_CLASSES
 
@@ -52,27 +70,45 @@ ENGINES = {
 }
 
 
+def _host(doc: str = "") -> dict:
+    """Field metadata marking a config field as *host-side*: it steers
+    collection rng, energy charging or other host work but never the
+    shapes/semantics of the jitted calls, so replicas differing only in
+    host-side fields may run replica-stacked (see :func:`_stack_key`)."""
+    return {"host_side": True, "doc": doc}
+
+
 @dataclass(frozen=True)
 class ScenarioConfig:
     windows: int = 100
     obs_per_window: int = 100
-    lam_poisson: float = 7.0
-    zipf_alpha: float = 1.5
-    p_edge: float = 0.0           # fraction of each window shipped to the ES
+    lam_poisson: float = field(default=7.0, metadata=_host())
+    zipf_alpha: float = field(default=1.5, metadata=_host())
+    # fraction of each window shipped to the ES
+    p_edge: float = field(default=0.0, metadata=_host())
     algo: str = "star"            # 'star' | 'a2a' | 'edge_only'
-    tech: str = "4g"              # DC<->DC technology: '4g' | 'wifi'
-    uniform: bool = False         # Scenario 3: uniform allocation over mules
-    aggregate: bool = False       # data-aggregation heuristic (Section 6.3)
-    n_subsample: Optional[int] = None   # GreedyTL points per class (Sec. 7)
-    include_es_in_learning: bool = True
+    # DC<->DC technology: any transport spec string registered in
+    # repro.core.topology ('4g', 'wifi', 'ble', 'mesh:hops=3', 'lora:sf=12')
+    tech: str = field(default="4g", metadata=_host())
+    # Scenario 3: uniform allocation over mules (legacy switch; equivalent
+    # to collection="uniform", kept so existing grids keep working)
+    uniform: bool = field(default=False, metadata=_host())
+    # data-aggregation heuristic (Section 6.3)
+    aggregate: bool = field(default=False, metadata=_host())
+    # GreedyTL points per class (Sec. 7)
+    n_subsample: Optional[int] = field(default=None, metadata=_host())
+    include_es_in_learning: bool = field(default=True, metadata=_host())
     cap: int = 160                # padded local-dataset capacity
     eval_every: int = 1
-    seed: int = 0
+    seed: int = field(default=0, metadata=_host())
     engine: str = "fleet"         # 'fleet' (batched) | 'loop' (reference)
+    # collection-policy spec string (COLLECTION_POLICIES): 'poisson_zipf',
+    # 'uniform', 'trace:loads=60-25-15', 'bursty:burst=8'
+    collection: str = field(default="poisson_zipf", metadata=_host())
     # "This model is used to update the model elaborated until the previous
     # time slot" (paper Section 3): the window model updates the global model
     # incrementally. We use an exponential moving average with this rate.
-    global_update_rate: float = 0.3
+    global_update_rate: float = field(default=0.3, metadata=_host())
 
 
 @dataclass
@@ -110,25 +146,124 @@ def _zipf_probs(n: int, alpha: float) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# collection-policy registry (mirrors the transport registry)
+# ---------------------------------------------------------------------------
+
+# A policy maps (cfg, rng, n_mule_obs) -> (L mules, per-observation mule
+# assignment in [0, L)); factories take the spec-string parameters.
+CollectionPolicy = Callable[["ScenarioConfig", np.random.Generator, int],
+                            Tuple[int, np.ndarray]]
+
+
+def _poisson_zipf_policy() -> CollectionPolicy:
+    """The paper's process: Poisson(lambda) mules, Zipf(alpha) allocation."""
+    def policy(cfg, rng, n):
+        L = max(1, rng.poisson(cfg.lam_poisson))
+        return L, rng.choice(L, size=n, p=_zipf_probs(L, cfg.zipf_alpha))
+    return policy
+
+
+def _uniform_policy() -> CollectionPolicy:
+    """Scenario 3: Poisson(lambda) mules, uniform allocation."""
+    def policy(cfg, rng, n):
+        L = max(1, rng.poisson(cfg.lam_poisson))
+        return L, rng.integers(0, L, size=n)
+    return policy
+
+
+def _trace_policy(loads: str = "60-25-15") -> CollectionPolicy:
+    """Deterministic replay of a recorded allocation: ``loads`` is a
+    dash-separated per-mule load trace (relative shares), apportioned to
+    each window's observations by largest remainder — same mule fleet,
+    same split, every window, every seed."""
+    shares = np.array([int(s) for s in str(loads).split("-")], np.float64)
+    if len(shares) == 0 or (shares < 0).any() or shares.sum() <= 0:
+        raise ValueError(f"trace loads must be non-negative with a positive "
+                         f"sum, got {loads!r}")
+
+    def policy(cfg, rng, n):
+        L = len(shares)
+        quota = shares / shares.sum() * n
+        counts = np.floor(quota).astype(np.int64)
+        order = np.argsort(-(quota - counts))
+        counts[order[:n - counts.sum()]] += 1
+        return L, np.repeat(np.arange(L), counts)
+    return policy
+
+
+def _bursty_policy(burst: float = 8.0) -> CollectionPolicy:
+    """Bursty arrivals: observations reach mules in contiguous runs of
+    geometric mean length ``burst`` (a mule meets a sensor and drains it),
+    run owners drawn from the Zipf(alpha) ranking — heavier short-term
+    skew than i.i.d. Zipf at the same marginal allocation."""
+    if burst < 1.0:
+        raise ValueError(f"burst length must be >= 1, got {burst}")
+
+    def policy(cfg, rng, n):
+        L = max(1, rng.poisson(cfg.lam_poisson))
+        p = _zipf_probs(L, cfg.zipf_alpha)
+        assign = np.empty(n, np.int64)
+        i = 0
+        while i < n:
+            run = int(rng.geometric(1.0 / burst))
+            assign[i:i + run] = rng.choice(L, p=p)
+            i += run
+        return L, assign
+    return policy
+
+
+COLLECTION_POLICIES: Dict[str, Callable[..., CollectionPolicy]] = {
+    "poisson_zipf": _poisson_zipf_policy,
+    "uniform": _uniform_policy,
+    "trace": _trace_policy,
+    "bursty": _bursty_policy,
+}
+
+_POLICY_CACHE: Dict[str, CollectionPolicy] = {}
+
+
+def register_collection_policy(name: str,
+                               factory: Callable[..., CollectionPolicy]
+                               ) -> None:
+    """Register a collection-policy factory under a spec name."""
+    register_factory(COLLECTION_POLICIES, name, factory,
+                     "collection policy")
+
+
+def get_collection_policy(spec: str) -> CollectionPolicy:
+    """Resolve a policy spec string (``"bursty:burst=8"``) to a cached
+    policy callable; :class:`KeyError` on unknown names/malformed specs."""
+    return resolve_spec(spec, COLLECTION_POLICIES, _POLICY_CACHE,
+                        "collection policy")
+
+
+def _effective_collection(cfg: ScenarioConfig) -> str:
+    """The legacy ``uniform`` switch is sugar for ``collection="uniform"``
+    (only when the policy was left at its default, so explicit policies
+    always win)."""
+    if cfg.uniform and cfg.collection == "poisson_zipf":
+        return "uniform"
+    return cfg.collection
+
+
+# ---------------------------------------------------------------------------
 # per-window phases
 # ---------------------------------------------------------------------------
 
 def collect_window(cfg: ScenarioConfig, rng: np.random.Generator,
                    wx: np.ndarray, wy: np.ndarray, ledger: Ledger
                    ) -> List[DC]:
-    """Collection policy: split the window's observations between the Edge
-    Server (NB-IoT, fraction ``p_edge``) and a Poisson fleet of SmartMules
-    (802.15.4, Zipf- or uniformly-allocated), charging every transfer."""
+    """Collection phase: split the window's observations between the Edge
+    Server (NB-IoT, fraction ``p_edge``) and a SmartMule fleet (802.15.4)
+    whose size/allocation comes from the configured collection policy,
+    charging every transfer. This is a pure dispatch point: the arrival
+    process itself lives in :data:`COLLECTION_POLICIES`."""
     n_edge = int(round(cfg.p_edge * cfg.obs_per_window))
     idx = rng.permutation(cfg.obs_per_window)
     edge_idx, mule_idx = idx[:n_edge], idx[n_edge:]
 
-    L = max(1, rng.poisson(cfg.lam_poisson))
-    if cfg.uniform:
-        assign = rng.integers(0, L, size=len(mule_idx))
-    else:
-        assign = rng.choice(L, size=len(mule_idx),
-                            p=_zipf_probs(L, cfg.zipf_alpha))
+    policy = get_collection_policy(_effective_collection(cfg))
+    L, assign = policy(cfg, rng, len(mule_idx))
 
     dcs: List[DC] = []
     for m in range(L):
@@ -166,15 +301,46 @@ def update_global(cfg: ScenarioConfig, prev: Optional[np.ndarray],
 
 
 _predict = jax.jit(svm_predict)
-_EVAL_CACHE: list = []     # single entry: (data ref, device test array) —
-                           # the data ref pins the id; one slot, no growth
+
+
+class EvalCache:
+    """Keyed device-side test-set cache.
+
+    One entry per :class:`Dataset` object (keyed by identity, the dataset
+    ref pinned so ids stay valid), LRU-bounded so interleaved sweeps over
+    several datasets — sequential, stacked, or alternating — all hit
+    without re-uploading the test matrix every window."""
+
+    def __init__(self, maxsize: int = 4):
+        self.maxsize = maxsize
+        self._entries: "OrderedDict[int, tuple]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def test_array(self, data: Dataset) -> jnp.ndarray:
+        key = id(data)
+        hit = self._entries.get(key)
+        if hit is not None and hit[0] is data:
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return hit[1]
+        self.misses += 1
+        arr = jnp.asarray(data.x_test.astype(np.float32))
+        self._entries[key] = (data, arr)
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+        return arr
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+_eval_cache = EvalCache()
 
 
 def _eval(w: np.ndarray, data: Dataset) -> float:
-    if not _EVAL_CACHE or _EVAL_CACHE[0][0] is not data:
-        _EVAL_CACHE[:] = [(data, jnp.asarray(
-            data.x_test.astype(np.float32)))]
-    pred = np.asarray(_predict(jnp.asarray(w), _EVAL_CACHE[0][1]))
+    pred = np.asarray(_predict(jnp.asarray(w), _eval_cache.test_array(data)))
     return f_measure(data.y_test, pred, NUM_CLASSES)
 
 
@@ -219,10 +385,35 @@ def _run_edge_only(cfg: ScenarioConfig, data: Dataset, ledger: Ledger,
     return ScenarioResult(f1_curve, ledger, cfg)
 
 
-def run_scenario(cfg: ScenarioConfig, data: Dataset) -> ScenarioResult:
+def validate_config(cfg: ScenarioConfig) -> None:
+    """Fail fast on configs that cannot run: unknown engine / transport /
+    collection specs (KeyError, before any window runs) and the
+    empty-fleet trap — ``p_edge`` rounding to the whole window with the ES
+    excluded from learning leaves every round with ``dcs == []``, so the
+    global model would stay ``None`` forever and the first eval would
+    crash deep in the engines."""
     if cfg.engine not in ENGINES:
         raise KeyError(f"unknown engine {cfg.engine!r}; "
                        f"pick one of {sorted(ENGINES)}")
+    if cfg.algo != "edge_only":
+        from repro.core.energy import resolve_tech
+        from repro.core.topology import get_transport
+        get_transport(cfg.tech)      # relay structure ...
+        resolve_tech(cfg.tech)       # ... and per-event energy, both layers
+        get_collection_policy(_effective_collection(cfg))
+    n_edge = int(round(cfg.p_edge * cfg.obs_per_window))
+    if (cfg.algo != "edge_only" and not cfg.include_es_in_learning
+            and n_edge >= cfg.obs_per_window):
+        raise ValueError(
+            f"empty fleet: p_edge={cfg.p_edge} sends all "
+            f"{cfg.obs_per_window} observations of every window to the ES "
+            f"while include_es_in_learning=False, so no Data Collector "
+            f"ever joins a learning round; lower p_edge, set "
+            f"include_es_in_learning=True, or use algo='edge_only'")
+
+
+def run_scenario(cfg: ScenarioConfig, data: Dataset) -> ScenarioResult:
+    validate_config(cfg)
     rng = np.random.default_rng(cfg.seed)
     ledger = Ledger()
     n_total = cfg.windows * cfg.obs_per_window
@@ -246,15 +437,29 @@ def run_scenario(cfg: ScenarioConfig, data: Dataset) -> ScenarioResult:
     return ScenarioResult(f1_curve, ledger, cfg)
 
 
+# {field: default} for every ScenarioConfig field tagged host_side — the
+# stack key normalizes exactly these, so adding a field with
+# ``metadata=_host()`` automatically opts it into replica stacking (and
+# omitting the tag automatically keeps it a group splitter).
+_HOST_SIDE_DEFAULTS: Dict[str, object] = {
+    f.name: f.default for f in dataclasses.fields(ScenarioConfig)
+    if f.metadata.get("host_side")
+}
+
+
+def host_side_fields() -> Tuple[str, ...]:
+    """Names of the config fields that may vary within a stacked group."""
+    return tuple(_HOST_SIDE_DEFAULTS)
+
+
 def _stack_key(cfg: ScenarioConfig) -> ScenarioConfig:
     """Configs with equal keys may run replica-stacked: the normalized
     fields only steer host-side work (collection rng, energy charging,
     GreedyTL subsampling inputs, EMA rate), never the shapes or semantics
-    of the jitted calls, so stacking them changes nothing per replica."""
-    return dataclasses.replace(
-        cfg, seed=0, tech="4g", p_edge=0.0, uniform=False, aggregate=False,
-        n_subsample=None, zipf_alpha=1.5, lam_poisson=7.0,
-        global_update_rate=0.3, include_es_in_learning=True)
+    of the jitted calls, so stacking them changes nothing per replica.
+    Which fields those are is declared as ``host_side`` field metadata on
+    :class:`ScenarioConfig` — this function is purely derived."""
+    return dataclasses.replace(cfg, **_HOST_SIDE_DEFAULTS)
 
 
 def run_scenarios_stacked(cfgs: Sequence[ScenarioConfig], data: Dataset
@@ -274,6 +479,8 @@ def run_scenarios_stacked(cfgs: Sequence[ScenarioConfig], data: Dataset
     tolerance; tests/test_fleet_engine.py).
     """
     cfg0 = cfgs[0]
+    for c in cfgs:
+        validate_config(c)
     if any(_stack_key(c) != _stack_key(cfg0) for c in cfgs):
         raise ValueError("run_scenarios_stacked needs configs that agree "
                          "on every non-host-side field (see _stack_key)")
@@ -318,6 +525,12 @@ def run_scenarios_stacked(cfgs: Sequence[ScenarioConfig], data: Dataset
 def run_sweep(configs: Sequence[ScenarioConfig], data: Dataset, *,
               stack_seeds: bool = False) -> List[ScenarioResult]:
     """Evaluate many scenario configurations over the same dataset.
+
+    .. deprecated:: compatibility shim — new code should build a
+       declarative :class:`repro.core.experiment.SweepSpec` and call
+       ``spec.run(data, stack="auto")``, which routes through this
+       function and therefore emits identical results
+       (tests/test_experiment.py asserts the parity).
 
     The batched fleet trainers are shape-stable (bucketed sample capacity,
     bucketed DC capacity), so every configuration after the first reuses the

@@ -18,16 +18,21 @@ conventions lived as if-chains inside ``Ledger.unicast`` and inline loops in
   patterns the HTL algorithms use: ``unicast``, ``broadcast``, ``gather``
   and ``exchange_all``.
 
-New technologies (multi-hop 802.15.4 meshes, BLE, …) plug in by registering
-a ``Transport`` under :data:`TRANSPORTS` — algorithm code never needs to
-change.
+Transports are addressed by *spec strings* (grammar in
+:mod:`repro.core.registry`, DESIGN.md §5): a flat name picks a registered
+factory with its defaults (``"4g"``, ``"wifi"``, ``"ble"``), a
+parameterized spec configures one (``"mesh:hops=3"``, ``"lora:sf=12"``).
+New technologies plug in by registering a factory in
+:data:`TRANSPORT_FACTORIES` (plus, if they carry new per-event energies, a
+:class:`~repro.core.energy.Tech`) — algorithm code never needs to change.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 from repro.core.energy import Ledger
+from repro.core.registry import register_factory, resolve_spec
 
 
 @dataclass(frozen=True)
@@ -70,17 +75,77 @@ class ApRelayTransport(Transport):
         return hops, hops
 
 
-TRANSPORTS: Dict[str, Transport] = {
-    "4g": InfrastructureTransport(),
-    "nbiot": InfrastructureTransport(),
-    "802.15.4": InfrastructureTransport(),
-    "wifi": ApRelayTransport(),
+class LoRaTransport(InfrastructureTransport):
+    """LoRa star through a mains-powered gateway: infrastructure counts.
+    The spreading factor steers the *energy* layer (bitrate,
+    :func:`repro.core.energy.lora_bitrate_mbps`), not the relay
+    structure; it is accepted (and range-checked) here so one spec string
+    — ``"lora:sf=12"`` — configures both layers."""
+
+    def __init__(self, sf: int = 7):
+        super().__init__()
+        from repro.core.energy import lora_bitrate_mbps
+        lora_bitrate_mbps(sf)          # validate 7..12
+        self.sf = int(sf)
+
+
+class MeshTransport(Transport):
+    """Multi-hop 802.15.4 mesh: a unicast traverses ``hops`` links, each a
+    battery tx + battery rx (the intermediate relays are battery mules).
+    Only the *endpoint* events can be mains-exempt: an ES source skips the
+    first tx, an ES destination skips the last rx — so ``hops=1`` charges
+    identically to flat ``"802.15.4"`` and ``hops=3`` charges 3x the
+    battery tx/rx events between mules. Per-event energy stays the
+    802.15.4 Table-1 entry (:func:`repro.core.energy.resolve_tech`)."""
+
+    def __init__(self, hops: int = 1):
+        if isinstance(hops, bool) or hops != int(hops) or int(hops) < 1:
+            raise ValueError(f"mesh hop count must be a positive integer, "
+                             f"got {hops!r}")
+        self.hops = int(hops)
+
+    def counts(self, src: Node, dst: Node) -> Tuple[int, int]:
+        return (self.hops - (1 if src.is_es else 0),
+                self.hops - (1 if dst.is_es else 0))
+
+
+# Factories keyed by spec *name*; spec parameters become factory kwargs
+# ("mesh:hops=3" -> MeshTransport(hops=3)). BLE mirrors WiFi-Direct's star
+# (one mule is the GATT central and relays peripheral<->peripheral
+# traffic); LoRa is a star through a mains-powered gateway, i.e. the
+# infrastructure rule (DESIGN.md §5).
+TRANSPORT_FACTORIES: Dict[str, Callable[..., Transport]] = {
+    "4g": InfrastructureTransport,
+    "nbiot": InfrastructureTransport,
+    "802.15.4": InfrastructureTransport,
+    "wifi": ApRelayTransport,
+    "ble": ApRelayTransport,
+    "lora": LoRaTransport,
+    "mesh": MeshTransport,
 }
+
+_TRANSPORT_CACHE: Dict[str, Transport] = {}
+
+
+def register_transport(name: str,
+                       factory: Callable[..., Transport]) -> None:
+    """Register a transport factory under a spec name (idempotent for the
+    same factory; raises on a conflicting re-registration)."""
+    register_factory(TRANSPORT_FACTORIES, name, factory, "transport")
+
+
+def get_transport(spec: str) -> Transport:
+    """Resolve a transport spec string to a (cached) Transport instance.
+
+    Raises :class:`KeyError` for unknown names or malformed specs, so
+    ``Topology`` construction keeps its fail-fast contract."""
+    return resolve_spec(spec, TRANSPORT_FACTORIES, _TRANSPORT_CACHE,
+                        "transport")
 
 
 def transfer_counts(tech: str, src: Node, dst: Node) -> Tuple[int, int]:
     """(n_tx, n_rx) one unicast costs on battery, under ``tech``'s rules."""
-    return TRANSPORTS[tech].counts(src, dst)
+    return get_transport(tech).counts(src, dst)
 
 
 class Topology:
@@ -93,8 +158,9 @@ class Topology:
 
     def __init__(self, ledger: Ledger, tech: str,
                  nodes: Iterable[Node] = ()):
-        if tech not in TRANSPORTS:
-            raise KeyError(f"no transport registered for tech {tech!r}")
+        from repro.core.energy import resolve_tech
+        self.transport = get_transport(tech)   # KeyError on unknown spec
+        resolve_tech(tech)                     # ... or missing energy entry
         self.ledger = ledger
         self.tech = tech
         self.nodes: List[Node] = list(nodes)
@@ -113,7 +179,7 @@ class Topology:
     # -- message patterns ---------------------------------------------------
     def unicast(self, src: Node, dst: Node, nbytes: float, *,
                 purpose: str = "learning", what: str = "model") -> float:
-        n_tx, n_rx = transfer_counts(self.tech, src, dst)
+        n_tx, n_rx = self.transport.counts(src, dst)
         return self.ledger.add(self.tech, nbytes, purpose=purpose,
                                n_tx=n_tx, n_rx=n_rx, what=what)
 

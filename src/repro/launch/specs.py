@@ -65,7 +65,7 @@ def arch_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
 
 
 def shape_supported(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
-    """Whether (arch, shape) is in scope; reason when skipped (DESIGN.md §5)."""
+    """Whether (arch, shape) is in scope; reason when skipped (DESIGN.md §6)."""
     if shape.name == "long_500k":
         cfg = arch_for_shape(cfg, shape)
         if not (cfg.supports_long_context or cfg.sliding_window):

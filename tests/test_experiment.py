@@ -1,0 +1,296 @@
+"""Experiment API v1: SweepSpec expansion semantics, preset parity with
+the legacy hand-rolled paper grid, SweepResult JSON round-trip, the legacy
+run_sweep shim contract, and metadata-driven auto-stacking."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.experiment import (LABEL_AXIS, SweepResult, SweepSpec,
+                                   get_preset)
+from repro.core.scenario import (ScenarioConfig, host_side_fields,
+                                 run_scenario, run_sweep, _stack_key)
+from repro.data.synthetic_covtype import make_covtype_like
+
+DATA = make_covtype_like(seed=0)
+BASE = ScenarioConfig(windows=6, eval_every=2)
+
+
+# ---------------------------------------------------------------------------
+# expansion semantics
+# ---------------------------------------------------------------------------
+
+def test_cartesian_expansion_is_nested_loop_order():
+    spec = SweepSpec("g", base=BASE,
+                     axes={"algo": ("a2a", "star"), "tech": ("4g", "wifi")},
+                     label="{algo}_{tech}")
+    assert [l for l, _ in spec.rows()] == [
+        "a2a_4g", "a2a_wifi", "star_4g", "star_wifi"]
+    assert all(c.windows == 6 for _, c in spec.rows())
+
+
+def test_zip_expansion_and_explicit_labels():
+    spec = SweepSpec("z", base=BASE, mode="zip",
+                     axes={"p_edge": (0.5, 0.15),
+                           LABEL_AXIS: ("half", "fifteen")})
+    rows = spec.rows()
+    assert rows[0][0] == "half" and rows[0][1].p_edge == 0.5
+    assert rows[1][0] == "fifteen" and rows[1][1].p_edge == 0.15
+
+
+def test_variants_are_innermost_axis():
+    spec = SweepSpec("v", base=BASE, axes={"tech": ("4g", "wifi")},
+                     variants=(("{tech}_plain", {}),
+                               ("{tech}_agg", {"aggregate": True})))
+    labels = [l for l, _ in spec.rows()]
+    assert labels == ["4g_plain", "4g_agg", "wifi_plain", "wifi_agg"]
+    cfgs = dict(spec.rows())
+    assert not cfgs["wifi_plain"].aggregate and cfgs["wifi_agg"].aggregate
+
+
+def test_union_concatenates_and_seeds_replicate_innermost():
+    u = SweepSpec.union(
+        "u",
+        SweepSpec("a", base=BASE, label="a"),
+        SweepSpec("b", base=dataclasses.replace(BASE, algo="a2a"),
+                  label="b"),
+        seeds=(0, 1))
+    runs = u.configs()
+    assert [(l, c.seed) for l, c in runs] == [
+        ("a", 0), ("a", 1), ("b", 0), ("b", 1)]
+
+
+def test_with_seeds_int_and_sequence():
+    assert SweepSpec("s", base=BASE).with_seeds(3).seeds == (0, 1, 2)
+    assert SweepSpec("s", base=BASE).with_seeds((7, 9)).seeds == (7, 9)
+
+
+def test_expansion_errors():
+    with pytest.raises(ValueError):          # unknown axis name
+        SweepSpec("e", base=BASE, axes={"warp_factor": (1,)})
+    with pytest.raises(ValueError):          # zip length mismatch
+        SweepSpec("e", base=BASE, mode="zip",
+                  axes={"p_edge": (0.1, 0.2), "seed": (1,)})
+    with pytest.raises(ValueError):          # _label needs zip mode
+        SweepSpec("e", base=BASE, axes={LABEL_AXIS: ("x",)})
+    with pytest.raises(ValueError):          # bad mode
+        SweepSpec("e", base=BASE, mode="diagonal")
+    with pytest.raises(ValueError):          # union spec with own axes
+        SweepSpec("e", base=BASE, axes={"seed": (1,)},
+                  subspecs=(SweepSpec("x", base=BASE),))
+    with pytest.raises(ValueError, match="seeds"):   # nested seeds would
+        SweepSpec.union("e", SweepSpec("x", base=BASE).with_seeds(3))
+    with pytest.raises(ValueError):          # duplicate labels
+        SweepSpec("e", base=BASE, axes={"tech": ("4g", "wifi")},
+                  label="same").rows()
+
+
+def test_get_preset_unknown():
+    with pytest.raises(KeyError):
+        get_preset("no-such-grid")
+
+
+# ---------------------------------------------------------------------------
+# preset parity with the legacy hand-rolled paper grid
+# ---------------------------------------------------------------------------
+
+def _legacy_grid(base):
+    """The pre-SweepSpec benchmarks/paper_tables.py grid, verbatim."""
+    rows = [("fig2_edge_only", dataclasses.replace(base, algo="edge_only"))]
+    for frac, lbl in [(0.5, "50"), (0.15, "15"), (0.03, "3")]:
+        rows.append((f"table2_edge{lbl}pct",
+                     dataclasses.replace(base, algo="star", p_edge=frac,
+                                         tech="4g")))
+    for algo in ("a2a", "star"):
+        for tech in ("4g", "wifi"):
+            rows.append((f"table3_{algo}_{tech}",
+                         dataclasses.replace(base, algo=algo, tech=tech)))
+    for algo in ("a2a", "star"):
+        for tech in ("4g", "wifi"):
+            rows.append((f"table4_{algo}_{tech}_agg",
+                         dataclasses.replace(base, algo=algo, tech=tech,
+                                             aggregate=True)))
+    for algo in ("a2a", "star"):
+        for tech in ("4g", "wifi"):
+            rows.append((f"table5_{algo}_{tech}_uniform",
+                         dataclasses.replace(base, algo=algo, tech=tech,
+                                             uniform=True)))
+            rows.append((f"table6_{algo}_{tech}_uniform_agg",
+                         dataclasses.replace(base, algo=algo, tech=tech,
+                                             uniform=True, aggregate=True)))
+    for n_sub in (2, 5, 10):
+        for algo in ("a2a", "star"):
+            rows.append((f"table8_{algo}_n{n_sub}",
+                         dataclasses.replace(base, algo=algo, tech="wifi",
+                                             n_subsample=n_sub)))
+            rows.append((f"table9_{algo}_n{n_sub}_uniform",
+                         dataclasses.replace(base, algo=algo, tech="wifi",
+                                             uniform=True,
+                                             n_subsample=n_sub)))
+    return rows
+
+
+def test_paper_tables_preset_matches_legacy_grid_exactly():
+    """The acceptance contract: the preset expands to the --quick grid
+    config for config, labels, order and seed replication included — so
+    the new API runs literally the same run_sweep call as the legacy
+    pipeline."""
+    windows, n_seeds = 30, 1        # the --quick parameters
+    base = ScenarioConfig(windows=windows,
+                          eval_every=max(1, windows // 20), engine="fleet")
+    legacy = [(lbl, dataclasses.replace(cfg, seed=s))
+              for lbl, cfg in _legacy_grid(base) for s in range(n_seeds)]
+    spec = get_preset("paper_tables", windows=windows, n_seeds=n_seeds)
+    assert spec.configs() == legacy
+    # and at the paper's full scale
+    base = ScenarioConfig(windows=100, eval_every=5, engine="fleet")
+    legacy = [(lbl, dataclasses.replace(cfg, seed=s))
+              for lbl, cfg in _legacy_grid(base) for s in range(3)]
+    assert get_preset("paper_tables").configs() == legacy
+
+
+# ---------------------------------------------------------------------------
+# run + legacy shim parity + serialization
+# ---------------------------------------------------------------------------
+
+def _small_spec():
+    return SweepSpec.union(
+        "small",
+        SweepSpec("star", base=BASE, axes={"tech": ("4g", "wifi")},
+                  label="star_{tech}"),
+        SweepSpec("a2a", base=dataclasses.replace(BASE, algo="a2a"),
+                  label="a2a_4g"),
+        seeds=(0, 1))
+
+
+def test_run_matches_legacy_run_sweep_shim():
+    """SweepSpec.run and the legacy run_sweep path must emit identical
+    results — same configs, same order, same stacking — for both stack
+    modes."""
+    spec = _small_spec()
+    cfgs = [c for _, c in spec.configs()]
+    for stack, legacy_flag in (("auto", True), ("off", False)):
+        res = spec.run(DATA, stack=stack)
+        legacy = run_sweep(cfgs, DATA, stack_seeds=legacy_flag)
+        assert len(res.records) == len(legacy)
+        for rec, ref in zip(res.records, legacy):
+            assert rec.cfg == ref.cfg
+            assert rec.f1_curve == list(ref.f1_curve)
+            assert rec.events == ref.ledger.events
+
+
+def test_stack_auto_matches_off_within_parity_tolerance():
+    spec = _small_spec()
+    auto = spec.run(DATA, stack="auto")
+    off = spec.run(DATA, stack="off")
+    for a, b in zip(auto.records, off.records):
+        np.testing.assert_allclose(a.f1_curve, b.f1_curve, atol=1e-4)
+        assert (sum(e["mj"] for e in a.events)
+                == pytest.approx(sum(e["mj"] for e in b.events)))
+    with pytest.raises(ValueError):
+        spec.run(DATA, stack="sometimes")
+
+
+def test_sweep_result_json_round_trip_and_summary():
+    spec = _small_spec()
+    res = spec.run(DATA, stack="auto")
+    clone = SweepResult.from_json(res.to_json())
+    assert clone == res
+    assert clone.labels() == ["star_4g", "star_wifi", "a2a_4g"]
+
+    s = res.summary("star_4g")
+    rs = res.select("star_4g")
+    assert len(rs) == 2            # two seeds
+    assert s["f1"] == pytest.approx(
+        np.mean([r.converged_f1() for r in rs]))
+    assert s["energy_mj"] == pytest.approx(
+        np.mean([r.energy_total for r in rs]))
+    assert len(s["f1_curve"]) == len(rs[0].f1_curve)
+    with pytest.raises(KeyError):
+        res.summary("nope")
+
+
+def test_sweep_result_rejects_unknown_schema():
+    bad = '{"schema": 99, "name": "x", "records": []}'
+    with pytest.raises(ValueError):
+        SweepResult.from_json(bad)
+
+
+def test_run_record_reconstructs_scenario_result():
+    res = SweepSpec("one", base=BASE, label="one").run(DATA)
+    sr = res.records[0].to_scenario_result()
+    ref = run_scenario(res.records[0].cfg, DATA)
+    assert sr.f1_curve == ref.f1_curve
+    assert sr.energy_total == pytest.approx(ref.energy_total)
+
+
+def test_run_validates_configs_up_front():
+    spec = SweepSpec("bad", base=dataclasses.replace(
+        BASE, p_edge=1.0, include_es_in_learning=False), label="bad")
+    with pytest.raises(ValueError, match="empty fleet"):
+        spec.run(DATA)
+    spec = SweepSpec("bad2", base=dataclasses.replace(BASE, tech="warp"),
+                     label="bad2")
+    with pytest.raises(KeyError):
+        spec.run(DATA)
+
+
+# ---------------------------------------------------------------------------
+# metadata-driven auto-stacking
+# ---------------------------------------------------------------------------
+
+def test_host_side_metadata_drives_stack_key():
+    """The stack key is derived from ScenarioConfig field metadata: every
+    host_side field normalizes to its default, every other field splits
+    the group."""
+    hs = set(host_side_fields())
+    assert {"seed", "tech", "p_edge", "uniform", "aggregate", "n_subsample",
+            "zipf_alpha", "lam_poisson", "global_update_rate",
+            "include_es_in_learning", "collection"} == hs
+    defaults = ScenarioConfig()
+    for name in hs:
+        varied = dataclasses.replace(
+            BASE, **{name: _varied_value(name, getattr(defaults, name))})
+        assert _stack_key(varied) == _stack_key(BASE), name
+    for name in ("algo", "engine", "windows", "cap", "eval_every",
+                 "obs_per_window"):
+        varied = dataclasses.replace(
+            BASE, **{name: _varied_value(name, getattr(defaults, name))})
+        assert _stack_key(varied) != _stack_key(BASE), name
+
+
+def _varied_value(name, default):
+    if name == "algo":
+        return "a2a"
+    if name == "engine":
+        return "loop"
+    if name == "tech":
+        return "mesh:hops=2"
+    if name == "collection":
+        return "bursty:burst=4"
+    if isinstance(default, bool):
+        return not default
+    if default is None:
+        return 5
+    if isinstance(default, int):
+        return default + 3
+    if isinstance(default, float):
+        return default + 0.07
+    raise AssertionError(name)
+
+
+def test_new_policy_and_transport_fields_stack_with_baseline():
+    """Replicas varying only in collection policy / transport spec stack
+    into one group and still match their sequential runs."""
+    cfgs = [BASE,
+            dataclasses.replace(BASE, collection="bursty:burst=4", seed=1),
+            dataclasses.replace(BASE, tech="mesh:hops=3", seed=2),
+            dataclasses.replace(BASE, collection="trace:loads=60-25-15",
+                                tech="ble", seed=3)]
+    assert len({_stack_key(c) for c in cfgs}) == 1
+    stacked = run_sweep(cfgs, DATA, stack_seeds=True)
+    for cfg, r in zip(cfgs, stacked):
+        ref = run_scenario(cfg, DATA)
+        np.testing.assert_allclose(r.f1_curve, ref.f1_curve, atol=1e-4)
+        assert r.ledger.by_purpose() == ref.ledger.by_purpose()
+        assert r.ledger.by_tech() == ref.ledger.by_tech()

@@ -9,7 +9,9 @@ try:
 except ImportError:   # deterministic shim, tests/_hypothesis_fallback.py
     from _hypothesis_fallback import given, settings, strategies as st
 
-from repro.core.scenario import (ScenarioConfig, _zipf_probs, run_scenario)
+from repro.core.scenario import (EvalCache, ScenarioConfig, _eval,
+                                 _zipf_probs, get_collection_policy,
+                                 run_scenario, validate_config)
 from repro.data.synthetic_covtype import make_covtype_like
 
 DATA = make_covtype_like(seed=0)
@@ -93,3 +95,126 @@ def test_zipf_unbalance_matches_paper():
     """alpha=1.5, N=7: top mule holds ~53-55%% of the data (paper Sec. 6.3)."""
     p = _zipf_probs(7, 1.5)
     assert 0.5 < p[0] < 0.58
+
+
+# ---------------------------------------------------------------------------
+# empty-fleet guard
+# ---------------------------------------------------------------------------
+
+def test_empty_fleet_raises_clear_error():
+    """p_edge=1.0 with the ES excluded from learning leaves every window
+    with dcs == []; this must fail fast with a clear ValueError instead of
+    falling through into the engines with a forever-None global model."""
+    bad = dataclasses.replace(BASE, p_edge=1.0,
+                              include_es_in_learning=False)
+    with pytest.raises(ValueError, match="empty fleet"):
+        run_scenario(bad, DATA)
+    with pytest.raises(ValueError, match="empty fleet"):
+        validate_config(bad)
+    # ... including when rounding (not the literal 1.0) empties the fleet
+    with pytest.raises(ValueError, match="empty fleet"):
+        validate_config(dataclasses.replace(
+            BASE, p_edge=0.999, include_es_in_learning=False))
+
+
+def test_empty_fleet_guard_leaves_valid_configs_alone():
+    # all-edge collection is fine when the ES joins the learning round...
+    r = run_scenario(dataclasses.replace(BASE, windows=4, eval_every=2,
+                                         p_edge=1.0), DATA)
+    assert np.isfinite(r.f1_curve).all()
+    # ... and edge_only never builds a fleet at all
+    validate_config(dataclasses.replace(
+        BASE, algo="edge_only", p_edge=1.0, include_es_in_learning=False))
+    # high-but-not-total offload keeps some mule data
+    validate_config(dataclasses.replace(
+        BASE, p_edge=0.5, include_es_in_learning=False))
+
+
+# ---------------------------------------------------------------------------
+# collection-policy registry
+# ---------------------------------------------------------------------------
+
+def test_uniform_flag_equals_uniform_policy():
+    """The legacy uniform=True switch and collection="uniform" must be the
+    same process, rng draw for rng draw."""
+    a = run_scenario(dataclasses.replace(BASE, uniform=True, seed=2), DATA)
+    b = run_scenario(dataclasses.replace(BASE, collection="uniform",
+                                         seed=2), DATA)
+    assert a.f1_curve == b.f1_curve
+    assert a.energy_total == pytest.approx(b.energy_total)
+
+
+def test_trace_policy_is_deterministic_replay():
+    pol = get_collection_policy("trace:loads=50-30-20")
+    cfg = BASE
+    L1, a1 = pol(cfg, np.random.default_rng(0), 100)
+    L2, a2 = pol(cfg, np.random.default_rng(9), 100)
+    assert L1 == L2 == 3
+    assert (a1 == a2).all()                    # rng-independent replay
+    counts = np.bincount(a1, minlength=3)
+    assert list(counts) == [50, 30, 20]
+
+
+def test_bursty_policy_produces_contiguous_runs():
+    pol = get_collection_policy("bursty:burst=8")
+    L, assign = pol(BASE, np.random.default_rng(0), 200)
+    assert len(assign) == 200 and 0 <= assign.min() and assign.max() < L
+    switches = int((np.diff(assign) != 0).sum())
+    # i.i.d. assignment over ~7 mules switches ~85% of steps; bursts of
+    # mean length 8 switch at most ~1/4 of them
+    assert switches < 60
+
+
+def test_scenarios_run_under_every_builtin_policy():
+    for policy in ("poisson_zipf", "uniform", "trace:loads=60-25-15",
+                   "bursty:burst=4"):
+        r = run_scenario(dataclasses.replace(
+            BASE, windows=4, eval_every=2, collection=policy), DATA)
+        assert np.isfinite(r.f1_curve).all(), policy
+
+
+def test_unknown_or_malformed_policy_rejected():
+    with pytest.raises(KeyError):
+        run_scenario(dataclasses.replace(BASE, collection="tarot"), DATA)
+    with pytest.raises(KeyError):
+        get_collection_policy("bursty:burst")
+    with pytest.raises(KeyError):          # unknown parameter name
+        get_collection_policy("bursty:size=3")
+    with pytest.raises(ValueError):        # bad parameter value
+        get_collection_policy("bursty:burst=0.5")
+    with pytest.raises(ValueError):
+        get_collection_policy("trace:loads=0-0")
+
+
+# ---------------------------------------------------------------------------
+# keyed eval cache
+# ---------------------------------------------------------------------------
+
+def test_eval_cache_identity_and_eviction():
+    cache = EvalCache(maxsize=2)
+    d1 = make_covtype_like(seed=1)
+    d2 = make_covtype_like(seed=2)
+    a1 = cache.test_array(d1)
+    assert cache.test_array(d1) is a1          # hit: same device array
+    assert cache.hits == 1 and cache.misses == 1
+    a2 = cache.test_array(d2)
+    assert a2 is not a1
+    assert cache.test_array(d1) is a1          # both live under maxsize=2
+    d3 = make_covtype_like(seed=3)
+    cache.test_array(d3)                       # evicts LRU (d2)
+    assert len(cache) == 2
+    assert cache.test_array(d1) is a1          # d1 survived (recently used)
+    before = cache.misses
+    cache.test_array(d2)                       # d2 was evicted: a miss
+    assert cache.misses == before + 1
+
+
+def test_eval_serves_interleaved_datasets():
+    """The keyed cache must keep interleaved sweeps over several datasets
+    correct — each eval scores against its own test set."""
+    d_other = make_covtype_like(seed=7)
+    w = np.zeros((DATA.x_train.shape[1] + 1, 7), np.float32)
+    f_a1 = _eval(w, DATA)
+    f_b1 = _eval(w, d_other)
+    assert _eval(w, DATA) == f_a1
+    assert _eval(w, d_other) == f_b1

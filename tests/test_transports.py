@@ -1,0 +1,249 @@
+"""Transport registry: spec-string grammar round-trips, hand-computed
+energy parity for the mesh/BLE/LoRa additions against the DESIGN.md §2
+conventions, and scenario-level mesh charging (hops=1 == 802.15.4,
+hops=3 == 3x battery tx/rx events)."""
+import dataclasses
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # deterministic shim, tests/_hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core.energy import (Ledger, MODEL_BYTES, TECHS,
+                               lora_bitrate_mbps, resolve_tech)
+from repro.core.registry import format_spec, parse_spec
+from repro.core.scenario import ScenarioConfig, run_scenario
+from repro.core.topology import (MeshTransport, Node, Topology,
+                                 TRANSPORT_FACTORIES, get_transport,
+                                 transfer_counts)
+from repro.data.synthetic_covtype import make_covtype_like
+
+MULE, MULE2 = Node("SM1"), Node("SM2")
+AP = Node("SM3", is_ap=True)
+ES = Node("ES", is_es=True)
+
+# one representative spec per registered factory, plus parameterized forms
+SPECS = ["4g", "nbiot", "802.15.4", "wifi", "ble", "lora", "lora:sf=7",
+         "lora:sf=12", "mesh", "mesh:hops=1", "mesh:hops=2", "mesh:hops=3",
+         "mesh:hops=5"]
+
+
+# ---------------------------------------------------------------------------
+# spec grammar
+# ---------------------------------------------------------------------------
+
+@given(spec=st.sampled_from(SPECS))
+@settings(max_examples=len(SPECS), deadline=None)
+def test_registered_specs_parse_and_round_trip(spec):
+    name, params = parse_spec(spec)
+    assert name in TRANSPORT_FACTORIES
+    canonical = format_spec(name, params)
+    assert parse_spec(canonical) == (name, params)
+    # both spellings resolve, to the same cached instance, with the same
+    # counts and the same energy entry
+    t, tc = get_transport(spec), get_transport(canonical)
+    assert t is tc
+    assert t.counts(MULE, MULE2) == tc.counts(MULE, MULE2)
+    assert resolve_tech(spec).tx_mw > 0
+
+
+@pytest.mark.parametrize("bad", ["carrier-pigeon", "mesh:hops", "mesh:",
+                                 "", "warp:x=1", "lora:bw=250"])
+def test_malformed_or_unknown_specs_raise_keyerror(bad):
+    with pytest.raises(KeyError):
+        get_transport(bad)
+
+
+def test_bad_parameter_values_raise():
+    with pytest.raises(ValueError):
+        get_transport("mesh:hops=0")
+    with pytest.raises(ValueError):
+        get_transport("lora:sf=6")
+    with pytest.raises(ValueError):
+        lora_bitrate_mbps(13)
+    with pytest.raises(ValueError):          # no fractional SF modes
+        lora_bitrate_mbps(7.5)
+    with pytest.raises(ValueError):
+        resolve_tech("lora:sf=7.5")
+
+
+def test_fractional_hops_fail_fast_at_validation():
+    """Transport and energy layers must agree on rejecting fractional hop
+    counts, so a bad spec dies at validate_config — never mid-sweep after
+    collection energy was charged."""
+    from repro.core.scenario import ScenarioConfig, validate_config
+    with pytest.raises(ValueError):
+        get_transport("mesh:hops=2.5")
+    with pytest.raises(ValueError):
+        resolve_tech("mesh:hops=2.5")
+    with pytest.raises(ValueError):
+        validate_config(ScenarioConfig(tech="mesh:hops=2.5"))
+
+
+def test_ledger_add_rejects_bad_specs_directly():
+    """resolve_tech guards the direct Ledger.add path too — a typoed mesh
+    parameter must not silently charge 802.15.4 energy."""
+    led = Ledger()
+    with pytest.raises(KeyError):
+        led.add("mesh:hopz=3", 100.0, purpose="learning")
+    with pytest.raises(KeyError):
+        led.add("warp", 100.0, purpose="learning")
+    with pytest.raises(ValueError):          # bad value, not just bad name
+        led.add("mesh:hops=0", 100.0, purpose="learning")
+    assert led.events == []
+    # the valid spec resolves to the 802.15.4 energy entry (and caches)
+    assert resolve_tech("mesh:hops=3") is TECHS["802.15.4"]
+
+
+def test_spec_params_coerce_types():
+    assert parse_spec("mesh:hops=3") == ("mesh", {"hops": 3})
+    assert parse_spec("x:a=1.5,b=true,c=foo") == (
+        "x", {"a": 1.5, "b": True, "c": "foo"})
+    assert format_spec("mesh", {"hops": 3}) == "mesh:hops=3"
+    assert format_spec("wifi") == "wifi"
+
+
+# ---------------------------------------------------------------------------
+# mesh: hop-count-dependent charging
+# ---------------------------------------------------------------------------
+
+def test_mesh_hops1_matches_802154_counts_and_energy():
+    for src, dst in [(MULE, MULE2), (MULE, ES), (ES, MULE)]:
+        assert (transfer_counts("mesh:hops=1", src, dst)
+                == transfer_counts("802.15.4", src, dst))
+    l_mesh, l_flat = Ledger(), Ledger()
+    Topology(l_mesh, "mesh:hops=1", [MULE, MULE2]).unicast(
+        MULE, MULE2, MODEL_BYTES)
+    Topology(l_flat, "802.15.4", [MULE, MULE2]).unicast(
+        MULE, MULE2, MODEL_BYTES)
+    assert l_mesh.total() == l_flat.total()
+
+
+def test_mesh_hops_scale_battery_events():
+    """hops=h between battery mules: h tx + h rx, at 802.15.4 per-event
+    energy — hand-computed from E = P * S/B (DESIGN.md §2)."""
+    t = TECHS["802.15.4"]
+    per_event = (t.tx_mw * MODEL_BYTES * 8.0 / (t.up_mbps * 1e6)
+                 + t.rx_mw * MODEL_BYTES * 8.0 / (t.down_mbps * 1e6))
+    for h in (1, 2, 3, 5):
+        assert transfer_counts(f"mesh:hops={h}", MULE, MULE2) == (h, h)
+        led = Ledger()
+        Topology(led, f"mesh:hops={h}", [MULE, MULE2]).unicast(
+            MULE, MULE2, MODEL_BYTES)
+        assert led.total() == pytest.approx(h * per_event)
+
+
+def test_mesh_es_endpoints_exempt_one_event():
+    """Only the ES *endpoint* event is mains-exempt; the battery relays
+    in between always pay."""
+    assert transfer_counts("mesh:hops=3", MULE, ES) == (3, 2)
+    assert transfer_counts("mesh:hops=3", ES, MULE) == (2, 3)
+    assert transfer_counts("mesh:hops=1", MULE, ES) == (1, 0)
+    with pytest.raises(ValueError):
+        MeshTransport(hops=0)
+
+
+def test_mesh_scenario_charging_parity_and_scaling():
+    """Scenario level (the acceptance contract): tech="mesh:hops=1" is
+    indistinguishable from tech="802.15.4"; hops=3 charges exactly 3x the
+    learning energy (all-battery fleets, p_edge=0) and identical
+    collection energy."""
+    data = make_covtype_like(seed=0)
+    base = ScenarioConfig(windows=4, eval_every=2, algo="star", seed=1)
+    r_flat = run_scenario(dataclasses.replace(base, tech="802.15.4"), data)
+    r_h1 = run_scenario(dataclasses.replace(base, tech="mesh:hops=1"), data)
+    r_h3 = run_scenario(dataclasses.replace(base, tech="mesh:hops=3"), data)
+    assert r_h1.f1_curve == r_flat.f1_curve
+    assert r_h1.energy_total == pytest.approx(r_flat.energy_total)
+    assert r_h1.ledger.by_purpose() == r_flat.ledger.by_purpose()
+    assert r_h3.energy_collection == pytest.approx(r_h1.energy_collection)
+    assert r_h3.energy_learning == pytest.approx(3 * r_h1.energy_learning)
+
+
+# ---------------------------------------------------------------------------
+# BLE
+# ---------------------------------------------------------------------------
+
+def test_ble_hand_computed_energies():
+    """BLE mirrors the WiFi-Direct star (one mule is the GATT central):
+    non-central pairs relay (2 tx + 2 rx), central endpoints are direct.
+    E = P * S/B with the BLE Tech constants."""
+    t = TECHS["ble"]
+    tx = t.tx_mw * MODEL_BYTES * 8.0 / (t.up_mbps * 1e6)
+    rx = t.rx_mw * MODEL_BYTES * 8.0 / (t.down_mbps * 1e6)
+    assert transfer_counts("ble", MULE, MULE2) == (2, 2)
+    assert transfer_counts("ble", MULE, AP) == (1, 1)
+    assert transfer_counts("ble", MULE, ES) == (1, 0)
+    led = Ledger()
+    topo = Topology(led, "ble", [MULE, MULE2, AP, ES])
+    assert topo.unicast(MULE, MULE2, MODEL_BYTES) == pytest.approx(
+        2 * tx + 2 * rx)
+    assert topo.unicast(MULE, AP, MODEL_BYTES) == pytest.approx(tx + rx)
+    assert topo.unicast(MULE, ES, MODEL_BYTES) == pytest.approx(tx)
+
+
+# ---------------------------------------------------------------------------
+# LoRa
+# ---------------------------------------------------------------------------
+
+def test_lora_hand_computed_energies_and_sf_scaling():
+    """LoRa is a star through a mains-powered gateway (infrastructure
+    counts). Bitrate follows sf * BW / 2^sf * CR, so energy per byte
+    scales with the inverse bitrate ratio between spreading factors."""
+    assert transfer_counts("lora", MULE, MULE2) == (1, 1)
+    assert transfer_counts("lora:sf=12", MULE, ES) == (1, 0)
+
+    rate7 = lora_bitrate_mbps(7)
+    assert rate7 == pytest.approx(7 * 125e3 / 2**7 * 0.8 / 1e6)
+    t7 = resolve_tech("lora")
+    assert t7.up_mbps == pytest.approx(rate7)
+
+    led = Ledger()
+    e7 = Topology(led, "lora", [MULE, MULE2]).unicast(
+        MULE, MULE2, MODEL_BYTES)
+    e12 = Topology(led, "lora:sf=12", [MULE, MULE2]).unicast(
+        MULE, MULE2, MODEL_BYTES)
+    assert e7 == pytest.approx(
+        (t7.tx_mw + t7.rx_mw) * MODEL_BYTES * 8.0 / (rate7 * 1e6))
+    assert e12 / e7 == pytest.approx(rate7 / lora_bitrate_mbps(12))
+    assert e12 / e7 == pytest.approx((7 / 2**7) / (12 / 2**12))
+
+
+def test_parameterized_techs_cached_outside_paper_table():
+    t = resolve_tech("lora:sf=10")
+    assert resolve_tech("lora:sf=10") is t          # cached
+    assert "lora:sf=10" not in TECHS                # TECHS stays Table 1
+    assert "mesh:hops=3" not in TECHS
+    assert resolve_tech("lora") is TECHS["lora"]    # flat names untouched
+
+
+# ---------------------------------------------------------------------------
+# registry hygiene
+# ---------------------------------------------------------------------------
+
+def test_transport_cache_returns_same_instance():
+    assert get_transport("mesh:hops=3") is get_transport("mesh:hops=3")
+    assert get_transport("wifi") is get_transport("wifi")
+
+
+def test_register_transport_conflict_rejected():
+    from repro.core.topology import register_transport
+    with pytest.raises(ValueError):
+        register_transport("wifi", MeshTransport)
+    # idempotent for the same factory
+    register_transport("mesh", MeshTransport)
+
+
+def test_new_transports_run_full_scenarios():
+    data = make_covtype_like(seed=0)
+    base = ScenarioConfig(windows=3, eval_every=3)
+    energies = {}
+    for tech in ("ble", "lora:sf=7", "mesh:hops=2"):
+        r = run_scenario(dataclasses.replace(base, tech=tech), data)
+        assert np.isfinite(r.f1_curve).all()
+        assert r.energy_learning > 0
+        energies[tech] = r.energy_learning
+    # LoRa's kbps-range bitrate dwarfs BLE/mesh per-byte costs
+    assert energies["lora:sf=7"] > 100 * energies["ble"]
