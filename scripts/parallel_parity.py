@@ -1,0 +1,77 @@
+#!/usr/bin/env python
+"""Parallel-parity CI gate: a sharded sweep may never change the numbers.
+
+Runs a preset grid sequentially (``parallel="none"``) and under each
+requested parallel backend, then diffs the serialized ``SweepResult``
+JSON byte for byte. Exits non-zero on any mismatch.
+
+Run it under fake CPU devices so the ``devices`` backend actually spreads
+shards across several devices (the flag must be set before jax
+initializes, which is why this gate owns its process):
+
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+        python scripts/parallel_parity.py --preset smoke --windows 4 \
+        --expect-devices 8 --backends devices:n=8,processes:n=2
+
+Wired into scripts/verify.sh and .github/workflows/ci.yml.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def first_diff(a: str, b: str, context: int = 60) -> str:
+    k = next((i for i, (x, y) in enumerate(zip(a, b)) if x != y),
+             min(len(a), len(b)))
+    return (f"first divergence at byte {k}: "
+            f"...{a[max(0, k - context):k + context]!r} vs "
+            f"...{b[max(0, k - context):k + context]!r}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="smoke")
+    ap.add_argument("--windows", type=int, default=4)
+    ap.add_argument("--backends", default="devices:n=8",
+                    help="comma-separated executor specs to diff against "
+                         "the sequential run")
+    ap.add_argument("--expect-devices", type=int, default=0,
+                    help="fail unless jax sees exactly this many devices "
+                         "(guards the XLA_FLAGS fake-device recipe)")
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.core.experiment import get_preset
+    from repro.data.synthetic_covtype import make_covtype_like
+
+    n_dev = len(jax.devices())
+    print(f"devices={n_dev} backend={jax.default_backend()}")
+    if args.expect_devices and n_dev != args.expect_devices:
+        print(f"FAIL: expected {args.expect_devices} devices (did "
+              f"XLA_FLAGS=--xla_force_host_platform_device_count get set "
+              f"before jax initialized?)")
+        return 1
+
+    data = make_covtype_like(seed=0)
+    spec = get_preset(args.preset, windows=args.windows)
+    ref = spec.run(data, parallel="none").to_json()
+    rc = 0
+    for backend in args.backends.split(","):
+        got = spec.run(data, parallel=backend.strip()).to_json()
+        if got == ref:
+            print(f"parity {backend}: OK ({len(ref)} bytes identical)")
+        else:
+            print(f"parity {backend}: MISMATCH — {first_diff(ref, got)}")
+            rc = 1
+    if rc == 0:
+        print("parallel parity: all backends bitwise-identical")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

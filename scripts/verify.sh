@@ -21,4 +21,13 @@ python -m pytest -q tests/test_dispatch_gate.py
 # round-trips (also exercised end-to-end by bench_sweep_api below, which
 # runs a tiny preset and writes results/benchmarks/sweep_api.json)
 python -m pytest -q tests/test_experiment.py
+# parallel-sweep gates: partitioner/backends/golden-value suites, then the
+# parity diff under 8 fake CPU devices — a sharded run must reproduce the
+# sequential SweepResult bitwise (the flag must precede jax init, so the
+# gate owns its process; DESIGN.md §7)
+python -m pytest -q -m "not slow" tests/test_parallel_sweep.py \
+    tests/test_golden_tables.py
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python scripts/parallel_parity.py --preset smoke --windows 4 \
+    --expect-devices 8 --backends devices:n=8,processes:n=2
 python -m benchmarks.run --quick --skip-tables

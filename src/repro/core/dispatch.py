@@ -16,10 +16,16 @@ catches loops hidden inside helper modules, not just the engine drivers.
 """
 from __future__ import annotations
 
+import threading
 from collections import Counter
 from functools import wraps
+from typing import Mapping
 
 _COUNTS: Counter = Counter()
+# The parallel sweep executor (repro.core.parallel) dispatches shards from
+# several threads (devices backend) and merges counts shipped back from
+# worker processes (processes backend), so all counter mutation is locked.
+_LOCK = threading.Lock()
 
 
 def count_dispatch(name: str):
@@ -27,7 +33,8 @@ def count_dispatch(name: str):
     def deco(fn):
         @wraps(fn)
         def wrapper(*args, **kwargs):
-            _COUNTS[name] += 1
+            with _LOCK:
+                _COUNTS[name] += 1
             return fn(*args, **kwargs)
         wrapper.__wrapped__ = fn
         return wrapper
@@ -35,9 +42,20 @@ def count_dispatch(name: str):
 
 
 def reset_dispatch_counts() -> None:
-    _COUNTS.clear()
+    with _LOCK:
+        _COUNTS.clear()
 
 
 def dispatch_counts() -> dict:
     """Snapshot of {entry-point name: call count} since the last reset."""
-    return dict(_COUNTS)
+    with _LOCK:
+        return dict(_COUNTS)
+
+
+def merge_dispatch_counts(counts: Mapping[str, int]) -> None:
+    """Fold a worker process's dispatch counts into this process's counter,
+    so sharded sweeps stay observable by the dispatch CI gate: the merged
+    total bounds per-shard work (each shard's own counts are a subset)."""
+    with _LOCK:
+        for name, k in counts.items():
+            _COUNTS[name] += int(k)

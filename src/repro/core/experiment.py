@@ -24,7 +24,10 @@ This module gives that surface a declarative form:
 stacking (configs differing only in ``host_side`` fields share one
 dispatch set per window); ``run_scenario``/``run_sweep`` remain as the
 thin compatibility layer underneath, so the two paths are value-identical
-by construction (tests/test_experiment.py).
+by construction (tests/test_experiment.py). ``run(..., parallel=
+"devices:n=K" | "processes:n=K")`` shards the grid across devices or
+worker processes (:mod:`repro.core.parallel`) with stack-key groups kept
+atomic, reproducing the sequential result bitwise (DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -38,7 +41,7 @@ from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
 import numpy as np
 
 from repro.core.energy import Ledger
-from repro.core.scenario import (ScenarioConfig, ScenarioResult, run_sweep,
+from repro.core.scenario import (ScenarioConfig, ScenarioResult,
                                  validate_config)
 from repro.data.synthetic_covtype import Dataset
 
@@ -179,22 +182,34 @@ class SweepSpec:
                 for lbl, cfg in rows for s in self.seeds]
 
     # -- execution ----------------------------------------------------------
-    def run(self, data: Dataset, *, stack: str = "auto") -> "SweepResult":
+    def run(self, data: Dataset, *, stack: str = "auto",
+            parallel: str = "none") -> "SweepResult":
         """Evaluate the grid. ``stack="auto"`` runs metadata-derived
         stack-compatible groups replica-stacked (one dispatch set per
         window per group); ``stack="off"`` runs every config
         sequentially. Both go through the same engines, so they agree to
-        the engine-parity tolerance."""
+        the engine-parity tolerance.
+
+        ``parallel`` picks the execution backend by spec string
+        (:func:`repro.core.parallel.get_executor`): ``"none"`` (this
+        host, sequential over stacking groups), ``"devices:n=K"`` (K
+        shards threaded over ``jax.devices()``) or ``"processes:n=K"``
+        (spawned worker pool). Stack-key groups are never split across
+        shards, so every backend runs the same stacked computations in
+        the same within-group order — results are bitwise identical
+        across backends (tests/test_parallel_sweep.py; DESIGN.md §7)."""
+        from repro.core.parallel import get_executor
+
         if stack not in ("auto", "off"):
             raise ValueError(f"stack must be 'auto' or 'off', got {stack!r}")
+        executor = get_executor(parallel)
         runs = self.configs()
         for _, cfg in runs:
             validate_config(cfg)
-        results = run_sweep([cfg for _, cfg in runs], data,
-                            stack_seeds=(stack == "auto"))
-        records = [RunRecord(label=lbl, cfg=r.cfg, f1_curve=list(r.f1_curve),
-                             events=list(r.ledger.events))
-                   for (lbl, _), r in zip(runs, results)]
+        results = executor.execute([lbl for lbl, _ in runs],
+                                   [cfg for _, cfg in runs], data,
+                                   stack=(stack == "auto"))
+        records = records_from([lbl for lbl, _ in runs], results)
         return SweepResult(name=self.name, records=records)
 
 
@@ -213,6 +228,17 @@ class RunRecord:
     def to_scenario_result(self) -> ScenarioResult:
         return ScenarioResult(list(self.f1_curve), Ledger(list(self.events)),
                               self.cfg)
+
+
+def records_from(labels: Sequence[str], results: Sequence[ScenarioResult]
+                 ) -> List[RunRecord]:
+    """Label a batch of scenario results — the single record-building path
+    for both :meth:`SweepSpec.run` and the process-pool shard workers
+    (:mod:`repro.core.parallel`), so the record schema cannot drift
+    between backends."""
+    return [RunRecord(label=lbl, cfg=r.cfg, f1_curve=list(r.f1_curve),
+                      events=list(r.ledger.events))
+            for lbl, r in zip(labels, results)]
 
 
 @dataclass

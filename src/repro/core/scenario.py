@@ -45,6 +45,7 @@ remain as its thin compatibility layer.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -309,31 +310,48 @@ class EvalCache:
     One entry per :class:`Dataset` object (keyed by identity, the dataset
     ref pinned so ids stay valid), LRU-bounded so interleaved sweeps over
     several datasets — sequential, stacked, or alternating — all hit
-    without re-uploading the test matrix every window."""
+    without re-uploading the test matrix every window.
+
+    Mutation is locked: the ``devices`` sweep backend evaluates shards
+    from several threads against this one cache, and its entries hold
+    device buffers — which is also why the cache must never be shipped to
+    ``processes``-backend workers (each worker process builds its own;
+    tests/test_parallel_sweep.py pins both properties)."""
 
     def __init__(self, maxsize: int = 4):
         self.maxsize = maxsize
         self._entries: "OrderedDict[int, tuple]" = OrderedDict()
+        self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
 
     def test_array(self, data: Dataset) -> jnp.ndarray:
         key = id(data)
-        hit = self._entries.get(key)
-        if hit is not None and hit[0] is data:
-            self.hits += 1
-            self._entries.move_to_end(key)
-            return hit[1]
-        self.misses += 1
+        with self._lock:
+            hit = self._entries.get(key)
+            if hit is not None and hit[0] is data:
+                self.hits += 1
+                self._entries.move_to_end(key)
+                return hit[1]
+        # upload outside the lock (device transfer can be slow); a racing
+        # miss on the same dataset costs one redundant upload, nothing else
         arr = jnp.asarray(data.x_test.astype(np.float32))
-        self._entries[key] = (data, arr)
-        self._entries.move_to_end(key)
-        while len(self._entries) > self.maxsize:
-            self._entries.popitem(last=False)
+        with self._lock:
+            self.misses += 1
+            self._entries[key] = (data, arr)
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.maxsize:
+                self._entries.popitem(last=False)
         return arr
 
     def __len__(self) -> int:
         return len(self._entries)
+
+    def __reduce__(self):
+        raise TypeError(
+            "EvalCache holds jax device buffers and is process-local; "
+            "workers of the 'processes' sweep backend must build their "
+            "own (never pickle it across the pool boundary)")
 
 
 _eval_cache = EvalCache()
@@ -452,14 +470,38 @@ def host_side_fields() -> Tuple[str, ...]:
     return tuple(_HOST_SIDE_DEFAULTS)
 
 
-def _stack_key(cfg: ScenarioConfig) -> ScenarioConfig:
+def stack_key(cfg: ScenarioConfig) -> ScenarioConfig:
     """Configs with equal keys may run replica-stacked: the normalized
     fields only steer host-side work (collection rng, energy charging,
     GreedyTL subsampling inputs, EMA rate), never the shapes or semantics
     of the jitted calls, so stacking them changes nothing per replica.
     Which fields those are is declared as ``host_side`` field metadata on
-    :class:`ScenarioConfig` — this function is purely derived."""
+    :class:`ScenarioConfig` — this function is purely derived.
+
+    The key is also the sharding atom of the parallel sweep executor
+    (:mod:`repro.core.parallel`): a partition that never splits equal-key
+    rows across shards preserves exactly the stacking groups — and
+    therefore exactly the computation — of a sequential run.
+    """
     return dataclasses.replace(cfg, **_HOST_SIDE_DEFAULTS)
+
+
+# compatibility alias (pre-parallel-executor internal name)
+_stack_key = stack_key
+
+
+def stack_groups(configs: Sequence[ScenarioConfig],
+                 key_fn: Callable[[ScenarioConfig], object] = stack_key
+                 ) -> List[List[int]]:
+    """Indices of ``configs`` grouped by ``key_fn`` (default
+    :func:`stack_key`), groups in first-appearance order, indices
+    ascending — the shared grouping entry for the stacked sweep driver
+    below and the shard partitioner in :mod:`repro.core.parallel`, so
+    grouping semantics cannot diverge between the two."""
+    groups: "OrderedDict[object, List[int]]" = OrderedDict()
+    for i, cfg in enumerate(configs):
+        groups.setdefault(key_fn(cfg), []).append(i)
+    return list(groups.values())
 
 
 def run_scenarios_stacked(cfgs: Sequence[ScenarioConfig], data: Dataset
@@ -547,12 +589,10 @@ def run_sweep(configs: Sequence[ScenarioConfig], data: Dataset, *,
     """
     if not stack_seeds:
         return [run_scenario(cfg, data) for cfg in configs]
-    groups: dict = {}
-    for i, cfg in enumerate(configs):
-        groups.setdefault(_stack_key(cfg), []).append(i)
     results: List[Optional[ScenarioResult]] = [None] * len(configs)
-    for key, idxs in groups.items():
+    for idxs in stack_groups(configs):
         grp = [configs[i] for i in idxs]
+        key = stack_key(grp[0])
         if (len(grp) == 1 or key.engine != "fleet"
                 or key.algo not in ("a2a", "star")):
             rs = [run_scenario(c, data) for c in grp]

@@ -1,0 +1,53 @@
+#!/usr/bin/env python
+"""Regenerate tests/golden/smoke_golden.json (the golden-value fixture).
+
+Only run this to bless an INTENTIONAL numeric change — the whole point of
+the fixture is that accidental drift fails tests/test_golden_tables.py.
+
+    PYTHONPATH=src python tests/golden/regen_smoke_golden.py
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..",
+                                "src"))
+
+WINDOWS, N_SEEDS, DATA_SEED = 4, 2, 0
+
+
+def main() -> None:
+    from repro.core.experiment import get_preset
+    from repro.data.synthetic_covtype import make_covtype_like
+
+    data = make_covtype_like(seed=DATA_SEED)
+    spec = get_preset("smoke", windows=WINDOWS, n_seeds=N_SEEDS)
+    res = spec.run(data)
+    payload = {
+        "preset": "smoke",
+        "windows": WINDOWS,
+        "n_seeds": N_SEEDS,
+        "data_seed": DATA_SEED,
+        "n_runs": len(res.records),
+        "per_label": {
+            lbl: {k: res.summary(lbl)[k]
+                  for k in ("f1", "f1_curve", "energy_mj",
+                            "collection_mj", "learning_mj")}
+            for lbl in res.labels()
+        },
+        "per_run_final_f1": [
+            {"label": r.label, "seed": r.cfg.seed,
+             "final_f1": float(r.f1_curve[-1])}
+            for r in res.records
+        ],
+    }
+    out = os.path.join(os.path.dirname(__file__), "smoke_golden.json")
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"wrote {out}: {len(res.records)} runs, "
+          f"labels={res.labels()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,220 @@
+"""Parallel sweep executor: backend parity (the bitwise contract),
+partitioner properties, per-shard dispatch accounting, and the
+process-pool isolation guards (DESIGN.md §7).
+
+The hard promise under test: ``parallel="devices:n=K"`` and
+``parallel="processes:n=K"`` may never change a published number — their
+``SweepResult`` JSON must be byte-identical to the sequential run's.
+"""
+import os
+import pickle
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # deterministic shim, tests/_hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import scenario
+from repro.core.dispatch import dispatch_counts, reset_dispatch_counts
+from repro.core.experiment import get_preset
+from repro.core.parallel import (EXECUTORS, assert_host_only, get_executor,
+                                 partition_runs, run_cost)
+from repro.core.scenario import ScenarioConfig, stack_groups, stack_key
+from repro.data.synthetic_covtype import make_covtype_like
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+DATA = make_covtype_like(seed=0)
+
+FLEET_ENTRIES = ("train_svm", "train_svm_fleet", "greedytl",
+                 "greedytl_fleet", "greedytl_fleet_stacked")
+
+
+def _fleet_counts():
+    c = dispatch_counts()
+    return {k: c.get(k, 0) for k in FLEET_ENTRIES}
+
+
+# ---------------------------------------------------------------------------
+# backend parity: serialized results must be byte-identical
+# ---------------------------------------------------------------------------
+
+def test_smoke_parity_devices_backend_both_stack_modes():
+    spec = get_preset("smoke", windows=4)
+    for stack in ("auto", "off"):
+        ref = spec.run(DATA, stack=stack).to_json()
+        got = spec.run(DATA, stack=stack, parallel="devices:n=8").to_json()
+        assert got == ref, f"devices backend drifted (stack={stack})"
+
+
+def test_smoke_parity_processes_backend_and_dispatch_merge():
+    """One process-pool run checks three contracts at once: JSON parity
+    with the sequential run, worker dispatch counts merged back equal to
+    the sequential counts (same groups -> same jitted calls, so the
+    per-shard dispatch gate holds), and the parent's EvalCache untouched
+    (workers evaluate in their own processes)."""
+    spec = get_preset("smoke", windows=3)
+    reset_dispatch_counts()
+    ref = spec.run(DATA)
+    seq_counts = _fleet_counts()
+    cache = scenario._eval_cache
+    hits, misses = cache.hits, cache.misses
+
+    reset_dispatch_counts()
+    got = spec.run(DATA, parallel="processes:n=2")
+    assert got.to_json() == ref.to_json()
+    assert _fleet_counts() == seq_counts
+    assert (cache.hits, cache.misses) == (hits, misses)
+
+
+def test_transport_grid_parity_devices_backend():
+    spec = get_preset("transport_grid", windows=3)
+    ref = spec.run(DATA).to_json()
+    assert spec.run(DATA, parallel="devices:n=8").to_json() == ref
+
+
+@pytest.mark.slow
+def test_transport_grid_parity_processes_backend():
+    spec = get_preset("transport_grid", windows=3)
+    ref = spec.run(DATA).to_json()
+    assert spec.run(DATA, parallel="processes:n=2").to_json() == ref
+
+
+@pytest.mark.slow
+def test_fake_devices_parity_subprocess():
+    """The real multi-device path: 8 fake CPU devices (the XLA flag must
+    be set before jax initializes, so this needs its own process — same
+    recipe as scripts/verify.sh's parity gate)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts", "parallel_parity.py"),
+         "--preset", "smoke", "--windows", "3", "--expect-devices", "8",
+         "--backends", "devices:n=8"],
+        env=env, capture_output=True, text=True, timeout=540)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    assert "devices=8" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# partitioner properties
+# ---------------------------------------------------------------------------
+
+ALGOS = ("a2a", "star")
+TECHS = ("4g", "wifi", "ble")
+
+
+def _mk_cfg(row):
+    windows, algo_i, tech_i, seed = row
+    return ScenarioConfig(windows=windows, algo=ALGOS[algo_i % 2],
+                          tech=TECHS[tech_i % 3], seed=seed)
+
+
+ROWS = st.lists(st.tuples(st.integers(min_value=1, max_value=40),
+                          st.integers(min_value=0, max_value=1),
+                          st.integers(min_value=0, max_value=2),
+                          st.integers(min_value=0, max_value=3)),
+                min_size=1, max_size=24)
+
+
+@settings(max_examples=40, deadline=None)
+@given(rows=ROWS, n_shards=st.integers(min_value=1, max_value=8))
+def test_partitioner_assigns_every_row_once_and_keeps_groups_whole(
+        rows, n_shards):
+    cfgs = [_mk_cfg(r) for r in rows]
+    shards = partition_runs(cfgs, n_shards)
+    assert len(shards) == n_shards
+    flat = sorted(i for s in shards for i in s)
+    assert flat == list(range(len(cfgs)))          # exactly-once
+    owner = {i: k for k, s in enumerate(shards) for i in s}
+    for group in stack_groups(cfgs):
+        assert len({owner[i] for i in group}) == 1  # stack-key atomicity
+    for s in shards:
+        assert s == sorted(s)                       # order-stable shards
+
+
+@settings(max_examples=40, deadline=None)
+@given(rows=ROWS, n_shards=st.integers(min_value=1, max_value=8))
+def test_partitioner_balance_within_2x_ideal(rows, n_shards):
+    cfgs = [_mk_cfg(r) for r in rows]
+    shards = partition_runs(cfgs, n_shards)
+    shard_costs = [sum(run_cost(cfgs[i]) for i in s) for s in shards]
+    group_costs = [sum(run_cost(cfgs[i]) for i in g)
+                   for g in stack_groups(cfgs)]
+    ideal = max(sum(shard_costs) / n_shards, max(group_costs))
+    assert max(shard_costs) <= 2.0 * ideal + 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(rows=ROWS, n_shards=st.integers(min_value=1, max_value=8),
+       rot=st.integers(min_value=0, max_value=23))
+def test_partitioner_invariant_to_row_order(rows, n_shards, rot):
+    """Shard k must receive the same multiset of configs however the input
+    rows are permuted (rotations and reversal stand in for arbitrary
+    permutations)."""
+    cfgs = [_mk_cfg(r) for r in rows]
+
+    def shard_contents(cs):
+        return [sorted(repr(cs[i]) for i in s)
+                for s in partition_runs(cs, n_shards)]
+
+    ref = shard_contents(cfgs)
+    k = rot % len(cfgs)
+    assert shard_contents(cfgs[k:] + cfgs[:k]) == ref
+    assert shard_contents(list(reversed(cfgs))) == ref
+
+
+def test_partitioner_rejects_bad_shard_count():
+    with pytest.raises(ValueError):
+        partition_runs([ScenarioConfig()], 0)
+
+
+def test_partitioner_smoke_grid_layout():
+    """The smoke preset's two stack groups land whole on the two
+    least-loaded shards, larger group first."""
+    cfgs = [c for _, c in get_preset("smoke", windows=4).configs()]
+    shards = partition_runs(cfgs, 8)
+    assert shards[0] == [0, 1, 2, 3]       # star 4g/mesh x 2 seeds
+    assert shards[1] == [4, 5]             # a2a_wifi x 2 seeds
+    assert all(not s for s in shards[2:])
+
+
+# ---------------------------------------------------------------------------
+# executor registry + process-pool isolation guards
+# ---------------------------------------------------------------------------
+
+def test_executor_registry_spec_grammar():
+    assert get_executor("none") is get_executor("none")
+    assert get_executor("devices:n=8") is get_executor("devices:n=8")
+    assert sorted(EXECUTORS) == ["devices", "none", "processes"]
+    with pytest.raises(KeyError):
+        get_executor("warpdrive")
+    with pytest.raises(KeyError):          # unknown parameter name
+        get_executor("devices:bogus=1")
+    with pytest.raises(ValueError):        # invalid parameter value
+        get_executor("processes:n=0")
+
+
+def test_assert_host_only_rejects_device_buffers():
+    import jax.numpy as jnp
+
+    assert_host_only((["a"], {"x": np.zeros(3)}, DATA,
+                      ScenarioConfig()))    # numpy + plain data pass
+    with pytest.raises(TypeError, match="device buffer"):
+        assert_host_only({"w": jnp.zeros(3)})
+    with pytest.raises(TypeError, match="device buffer"):
+        assert_host_only([("nested", [jnp.ones(2)])])
+
+
+def test_eval_cache_never_crosses_the_pool_boundary():
+    """The EvalCache holds jax device buffers; pickling it (the only way
+    it could ride a worker queue) must refuse."""
+    cache = scenario.EvalCache()
+    cache.test_array(DATA)
+    with pytest.raises(TypeError, match="process-local"):
+        pickle.dumps(cache)
