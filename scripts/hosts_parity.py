@@ -1,0 +1,99 @@
+#!/usr/bin/env python
+"""Hosts-launcher CI gate: multi-host dispatch — and worker loss — may
+never change the numbers.
+
+Runs a preset grid sequentially (``parallel="none"``) and under the
+``hosts`` launcher (DESIGN.md §8), then diffs the serialized
+``SweepResult`` JSON byte for byte. With ``--inject-failures`` it runs a
+second launched pass in which one ``local:`` worker is SIGKILLed
+mid-shard on its first attempt (the launcher's ``inject_kill`` hook):
+the gate then also asserts the attempt log recorded exactly that crash
+and the retry that healed it, while the merged bytes still match.
+
+    python scripts/hosts_parity.py --preset smoke --windows 3 \
+        --spec "hosts:channel=local,n=2,retries=1" --inject-failures
+
+Wired into scripts/verify.sh (gates phase) and a named step of the CI
+``gates`` job, mirroring scripts/parallel_parity.py.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def first_diff(a: str, b: str, context: int = 60) -> str:
+    k = next((i for i, (x, y) in enumerate(zip(a, b)) if x != y),
+             min(len(a), len(b)))
+    return (f"first divergence at byte {k}: "
+            f"...{a[max(0, k - context):k + context]!r} vs "
+            f"...{b[max(0, k - context):k + context]!r}")
+
+
+def check_attempts(meta: dict, inject_shard: int | None) -> list[str]:
+    """Cross-check the attempt log against what the run was told to do."""
+    problems = []
+    shards = meta.get("launcher", {}).get("shards", [])
+    if not shards:
+        return ["no launcher attempt log in SweepResult.meta"]
+    for s in shards:
+        statuses = [a["status"] for a in s["attempts"]]
+        want = (["crash", "ok"] if s["shard"] == inject_shard else ["ok"])
+        if statuses != want:
+            problems.append(f"shard {s['shard']}: attempt statuses "
+                            f"{statuses}, expected {want}")
+    return problems
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="smoke")
+    ap.add_argument("--windows", type=int, default=3)
+    ap.add_argument("--spec", default="hosts:channel=local,n=2,retries=1",
+                    help="hosts executor spec to diff against the "
+                         "sequential run")
+    ap.add_argument("--inject-failures", action="store_true",
+                    help="also run with one local worker SIGKILLed "
+                         "mid-shard on its first attempt and assert the "
+                         "retry restores bitwise parity")
+    args = ap.parse_args()
+
+    from repro.core.experiment import get_preset
+    from repro.data.synthetic_covtype import make_covtype_like
+
+    data = make_covtype_like(seed=0)
+    spec = get_preset(args.preset, windows=args.windows)
+    ref = spec.run(data, parallel="none").to_json()
+    rc = 0
+
+    passes = [("clean", args.spec, None)]
+    if args.inject_failures:
+        passes.append(("fault-injected", f"{args.spec},backoff=0.01,"
+                                         f"inject_kill=0", 0))
+    for label, backend, inject_shard in passes:
+        result = spec.run(data, parallel=backend)
+        got = result.to_json()
+        attempts = result.meta.get("launcher", {}).get("attempts_total", 0)
+        if got == ref:
+            print(f"hosts parity [{label}]: OK ({len(ref)} bytes "
+                  f"identical, {attempts} shard attempts)")
+        else:
+            print(f"hosts parity [{label}]: MISMATCH — "
+                  f"{first_diff(ref, got)}")
+            rc = 1
+        problems = check_attempts(result.meta, inject_shard)
+        for p in problems:
+            print(f"hosts attempt log [{label}]: {p}")
+            rc = 1
+    if rc == 0:
+        print("hosts launcher: bitwise-identical to sequential"
+              + (", clean and under injected worker crash"
+                 if args.inject_failures else ""))
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,33 +1,70 @@
 #!/usr/bin/env bash
-# Tier-1 verification: full test suite + benchmark smoke.
-# Usage: scripts/verify.sh [--fast]   (--fast deselects @slow tests)
+# Tier-1 verification: test suite + parity/fault gates + benchmark smoke.
+#
+# Usage: scripts/verify.sh [--fast] [--units|--gates|--bench]
+#   --fast    deselect @slow tests
+#   --units   only the unit/property test pass (gate files excluded —
+#             they run once, in the gates phase, not twice)
+#   --gates   only the explicit CI gates (dispatch/experiment/parallel/
+#             launcher suites + the parity and fault-injection scripts)
+#   --bench   only the benchmark smoke
+# Default (no phase flag) runs all three phases in order. The CI matrix
+# (.github/workflows/ci.yml) runs the phases as parallel jobs.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+MODE=all
 MARK=()
-if [[ "${1:-}" == "--fast" ]]; then
-    MARK=(-m "not slow")
+for arg in "$@"; do
+    case "$arg" in
+        --fast) MARK=(-m "not slow") ;;
+        --units|--gates|--bench) MODE="${arg#--}" ;;
+        *) echo "unknown argument: $arg" >&2; exit 2 ;;
+    esac
+done
+
+# Files re-run explicitly by the gates phase; the units pass excludes
+# them so a full verify.sh executes every test file exactly once.
+GATE_FILES=(
+    tests/test_dispatch_gate.py
+    tests/test_experiment.py
+    tests/test_parallel_sweep.py
+    tests/test_golden_tables.py
+    tests/test_launcher.py
+)
+
+if [[ "$MODE" == "all" || "$MODE" == "units" ]]; then
+    IGNORES=()
+    for f in "${GATE_FILES[@]}"; do IGNORES+=("--ignore=$f"); done
+    python -m pytest -x -q "${MARK[@]}" "${IGNORES[@]}"
 fi
 
-python -m pytest -x -q "${MARK[@]}"
-# dispatch-count regression gate: O(1) jitted dispatches per window, no
-# per-DC / per-replica loops (redundant with the suite above, but kept as
-# an explicit, individually-runnable CI gate)
-python -m pytest -q tests/test_dispatch_gate.py
-# experiment-API gate: SweepSpec preset == legacy grid config-for-config,
-# legacy run_sweep shim emits identical results, SweepResult JSON
-# round-trips (also exercised end-to-end by bench_sweep_api below, which
-# runs a tiny preset and writes results/benchmarks/sweep_api.json)
-python -m pytest -q tests/test_experiment.py
-# parallel-sweep gates: partitioner/backends/golden-value suites, then the
-# parity diff under 8 fake CPU devices — a sharded run must reproduce the
-# sequential SweepResult bitwise (the flag must precede jax init, so the
-# gate owns its process; DESIGN.md §7)
-python -m pytest -q -m "not slow" tests/test_parallel_sweep.py \
-    tests/test_golden_tables.py
-XLA_FLAGS="--xla_force_host_platform_device_count=8" \
-    python scripts/parallel_parity.py --preset smoke --windows 4 \
-    --expect-devices 8 --backends devices:n=8,processes:n=2
-python -m benchmarks.run --quick --skip-tables
+if [[ "$MODE" == "all" || "$MODE" == "gates" ]]; then
+    # dispatch-count regression gate (O(1) jitted dispatches per window)
+    # + experiment-API gate (SweepSpec preset == legacy grid, JSON
+    # round-trip)
+    python -m pytest -q "${MARK[@]}" tests/test_dispatch_gate.py \
+        tests/test_experiment.py
+    # parallel-sweep + hosts-launcher gates: partitioner/backend/golden
+    # suites and the launcher retry/crash suite (slow members — clean
+    # hosts parity, slurm bash-sim, fake-device subprocess — run here
+    # too unless --fast, matching the old full-suite coverage)
+    python -m pytest -q "${MARK[@]}" tests/test_parallel_sweep.py \
+        tests/test_golden_tables.py tests/test_launcher.py
+    # sharded-run parity under 8 fake CPU devices: a parallel run must
+    # reproduce the sequential SweepResult bitwise (the flag must precede
+    # jax init, so the gate owns its process; DESIGN.md §7)
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+        python scripts/parallel_parity.py --preset smoke --windows 4 \
+        --expect-devices 8 --backends devices:n=8,processes:n=2
+    # multi-host launcher parity, clean AND with one local worker
+    # SIGKILLed mid-shard on its first attempt (DESIGN.md §8)
+    python scripts/hosts_parity.py --preset smoke --windows 3 \
+        --spec "hosts:channel=local,n=2,retries=1" --inject-failures
+fi
+
+if [[ "$MODE" == "all" || "$MODE" == "bench" ]]; then
+    python -m benchmarks.run --quick --skip-tables
+fi

@@ -193,11 +193,17 @@ class SweepSpec:
         ``parallel`` picks the execution backend by spec string
         (:func:`repro.core.parallel.get_executor`): ``"none"`` (this
         host, sequential over stacking groups), ``"devices:n=K"`` (K
-        shards threaded over ``jax.devices()``) or ``"processes:n=K"``
-        (spawned worker pool). Stack-key groups are never split across
-        shards, so every backend runs the same stacked computations in
-        the same within-group order — results are bitwise identical
-        across backends (tests/test_parallel_sweep.py; DESIGN.md §7)."""
+        shards threaded over ``jax.devices()``), ``"processes:n=K"``
+        (spawned worker pool) or ``"hosts:channel=...,n=K,retries=R"``
+        (the multi-host launcher of :mod:`repro.core.launcher`: local
+        subprocess / ssh / slurm channels with shard-level retry).
+        Stack-key groups are never split across shards, so every backend
+        runs the same stacked computations in the same within-group
+        order — results are bitwise identical across backends
+        (tests/test_parallel_sweep.py, tests/test_launcher.py;
+        DESIGN.md §7–§8). Backends may report execution metadata (e.g.
+        the launcher's per-shard attempt log) through the out-of-band
+        ``SweepResult.meta`` field."""
         from repro.core.parallel import get_executor
 
         if stack not in ("auto", "off"):
@@ -206,11 +212,14 @@ class SweepSpec:
         runs = self.configs()
         for _, cfg in runs:
             validate_config(cfg)
-        results = executor.execute([lbl for lbl, _ in runs],
-                                   [cfg for _, cfg in runs], data,
-                                   stack=(stack == "auto"))
+        results, exec_meta = executor.execute_with_meta(
+            [lbl for lbl, _ in runs], [cfg for _, cfg in runs], data,
+            stack=(stack == "auto"))
         records = records_from([lbl for lbl, _ in runs], results)
-        return SweepResult(name=self.name, records=records)
+        out = SweepResult(name=self.name, records=records)
+        if exec_meta:
+            out.meta.update(exec_meta)
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -247,10 +256,20 @@ class SweepResult:
 
     JSON round-trips losslessly (``from_json(r.to_json()) == r``), so
     benchmark outputs become reloadable artifacts instead of write-only
-    dicts."""
+    dicts.
+
+    ``meta`` is an out-of-band side channel for execution metadata — the
+    multi-host launcher's per-shard attempt log lands here
+    (``meta["launcher"]``, DESIGN.md §8). It is excluded from equality
+    and from ``to_json`` by default, so two runs of the same grid compare
+    and serialize identically however (and however faultily) they were
+    executed — the bitwise-parity contract never sees it. Pass
+    ``include_meta=True`` to serialize it for operator forensics."""
     name: str
     records: List[RunRecord]
     _summaries: Dict[str, Dict[str, Any]] = field(
+        default_factory=dict, compare=False, repr=False)
+    meta: Dict[str, Any] = field(
         default_factory=dict, compare=False, repr=False)
     SCHEMA = 1
 
@@ -297,7 +316,8 @@ class SweepResult:
         return {lbl: self.summary(lbl) for lbl in self.labels()}
 
     # -- serialization ------------------------------------------------------
-    def to_json(self, path: Optional[str] = None, *, indent: int = 1) -> str:
+    def to_json(self, path: Optional[str] = None, *, indent: int = 1,
+                include_meta: bool = False) -> str:
         payload = {
             "schema": self.SCHEMA,
             "name": self.name,
@@ -308,6 +328,8 @@ class SweepResult:
                 "events": r.events,
             } for r in self.records],
         }
+        if include_meta and self.meta:
+            payload["meta"] = self.meta
         text = json.dumps(payload, indent=indent)
         if path is not None:
             with open(path, "w") as f:
@@ -326,7 +348,8 @@ class SweepResult:
                              f1_curve=list(r["f1_curve"]),
                              events=list(r["events"]))
                    for r in payload["records"]]
-        return cls(name=payload["name"], records=records)
+        return cls(name=payload["name"], records=records,
+                   meta=dict(payload.get("meta") or {}))
 
     @classmethod
     def load(cls, path: str) -> "SweepResult":

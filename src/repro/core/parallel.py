@@ -38,6 +38,13 @@ scripts/verify.sh diffs the serialized JSON). Dispatch counts are threaded
 back to the parent counter (:func:`repro.core.dispatch.
 merge_dispatch_counts`), so the O(buckets)-dispatches-per-window CI gate
 holds per shard too. See DESIGN.md §7.
+
+A third out-of-process backend, ``hosts`` (:mod:`repro.core.launcher`,
+DESIGN.md §8), scales the same partition/merge beyond one machine:
+shards ship as JSON payloads produced by the shared shard runner
+(:func:`run_shard_payload`) to local-subprocess / ssh / slurm worker
+channels, with shard-level retry on worker loss — same bitwise contract,
+gated by scripts/hosts_parity.py.
 """
 from __future__ import annotations
 
@@ -148,6 +155,17 @@ class SweepExecutor:
                 stack: bool) -> List[ScenarioResult]:
         raise NotImplementedError
 
+    def execute_with_meta(self, labels: Sequence[str],
+                          cfgs: Sequence[ScenarioConfig], data: Dataset, *,
+                          stack: bool
+                          ) -> Tuple[List[ScenarioResult], Dict[str, Any]]:
+        """Evaluate and additionally return execution metadata (attempt
+        logs, channel info, ...) for ``SweepResult.meta``. Metadata is a
+        side channel: it never enters the serialized result, so backends
+        that populate it keep the bitwise-parity contract intact. The
+        default backend has nothing to report."""
+        return self.execute(labels, cfgs, data, stack=stack), {}
+
 
 class _SequentialExecutor(SweepExecutor):
     """``parallel="none"``: the existing single-host path, verbatim."""
@@ -194,24 +212,59 @@ class _DeviceShardExecutor(SweepExecutor):
         return results
 
 
-def _worker_run_shard(task: Tuple[List[str], List[ScenarioConfig],
-                                  Dataset, bool]) -> Tuple[str, dict]:
-    """Process-pool worker: run one whole shard, return its SweepResult as
-    a JSON payload plus the worker's jitted-dispatch counts. Runs in a
-    spawned interpreter — jit caches, EvalCache and dispatch counters are
-    all process-local, so workers never share (or ship) device state."""
+def run_shard_payload(labels: Sequence[str], cfgs: Sequence[ScenarioConfig],
+                      data: Dataset, stack: bool) -> Tuple[str, dict]:
+    """Run one whole shard and return its transport-agnostic wire form:
+    the shard's :class:`~repro.core.experiment.SweepResult` serialized as
+    JSON plus the jitted-dispatch counts the shard incurred. This is the
+    single shard-runner shared by every out-of-process backend — the
+    spawn-pool worker below and the multi-host launcher workers
+    (:mod:`repro.core.launcher`) — so the payload schema cannot drift
+    between transports."""
     from repro.core.dispatch import reset_dispatch_counts
     from repro.core.experiment import SweepResult, records_from
 
-    # per-shard counts: one pool worker may execute several shards, and
-    # the parent merges every returned snapshot, so counts must not
+    # per-shard counts: one worker may execute several shards, and the
+    # parent merges every returned snapshot, so counts must not
     # accumulate across tasks
     reset_dispatch_counts()
-    labels, cfgs, data, stack = task
-    results = run_sweep(cfgs, data, stack_seeds=stack)
+    results = run_sweep(list(cfgs), data, stack_seeds=stack)
     records = records_from(labels, results)
     payload = SweepResult(name="shard", records=records).to_json(indent=0)
     return payload, dispatch_counts()
+
+
+def merge_shard_payloads(n_runs: int, shards: Sequence[Sequence[int]],
+                         outs: Sequence[Tuple[str, dict]]
+                         ) -> List[ScenarioResult]:
+    """Order-stable merge of per-shard wire payloads back into the full
+    run list: shard k's i-th record lands at the i-th index of shard k's
+    partition slot, and every shard's dispatch counts fold into the parent
+    counter (so the dispatch CI gate stays observable per shard). Shared
+    by the processes backend and the hosts launcher."""
+    from repro.core.experiment import SweepResult
+
+    results: List[Optional[ScenarioResult]] = [None] * n_runs
+    for idxs, (payload, counts) in zip(shards, outs):
+        shard_result = SweepResult.from_json(payload)
+        if len(shard_result.records) != len(idxs):
+            raise ValueError(
+                f"shard payload carries {len(shard_result.records)} records "
+                f"for a {len(idxs)}-run shard")
+        merge_dispatch_counts(counts)
+        for i, rec in zip(idxs, shard_result.records):
+            results[i] = rec.to_scenario_result()
+    return results
+
+
+def _worker_run_shard(task: Tuple[List[str], List[ScenarioConfig],
+                                  Dataset, bool]) -> Tuple[str, dict]:
+    """Process-pool worker: run one whole shard via the shared shard
+    runner. Runs in a spawned interpreter — jit caches, EvalCache and
+    dispatch counters are all process-local, so workers never share (or
+    ship) device state."""
+    labels, cfgs, data, stack = task
+    return run_shard_payload(labels, cfgs, data, stack)
 
 
 class _ProcessShardExecutor(SweepExecutor):
@@ -234,8 +287,6 @@ class _ProcessShardExecutor(SweepExecutor):
     def execute(self, labels, cfgs, data, *, stack):
         import multiprocessing as mp
 
-        from repro.core.experiment import SweepResult
-
         shards = [s for s in partition_runs(cfgs, self.n) if s]
         tasks = []
         for idxs in shards:
@@ -251,23 +302,29 @@ class _ProcessShardExecutor(SweepExecutor):
         ctx = mp.get_context("spawn")
         with ctx.Pool(processes=min(self.n, len(shards))) as pool:
             outs = pool.map(_worker_run_shard, tasks)
-        results: List[Optional[ScenarioResult]] = [None] * len(cfgs)
-        for idxs, (payload, counts) in zip(shards, outs):
-            shard_result = SweepResult.from_json(payload)
-            merge_dispatch_counts(counts)
-            for i, rec in zip(idxs, shard_result.records):
-                results[i] = rec.to_scenario_result()
-        return results
+        return merge_shard_payloads(len(cfgs), shards, outs)
 
 
 # ---------------------------------------------------------------------------
-# executor registry (shared spec grammar: "devices:n=8", "processes:n=2")
+# executor registry (shared spec grammar: "devices:n=8", "processes:n=2",
+# "hosts:channel=local,n=4,retries=2")
 # ---------------------------------------------------------------------------
+
+def _hosts_factory(**params) -> SweepExecutor:
+    """``"hosts:channel=...,n=K,retries=R"``: the multi-host launcher
+    (:mod:`repro.core.launcher`) — shards dispatched to independent host
+    processes through a pluggable ``HostChannel`` (``local`` subprocesses,
+    ``ssh`` remotes, ``slurm`` array jobs) with shard-level retry.
+    Imported lazily: the launcher builds on this module."""
+    from repro.core.launcher import HostsExecutor
+    return HostsExecutor(**params)
+
 
 EXECUTORS: Dict[str, Callable[..., SweepExecutor]] = {
     "none": _SequentialExecutor,
     "devices": _DeviceShardExecutor,
     "processes": _ProcessShardExecutor,
+    "hosts": _hosts_factory,
 }
 
 _EXECUTOR_CACHE: Dict[str, SweepExecutor] = {}

@@ -14,6 +14,21 @@ string field and sweeps stay declarative — ``"mesh:hops=3"``,
 coercion, and :func:`format_spec` renders the canonical form back
 (sorted keys), so ``format_spec(*parse_spec(s))`` is a stable round-trip
 for any valid spec.
+
+**Nested (channel) specs** (DESIGN.md §8). A spec may itself appear as a
+parameter *value* of an outer spec — the multi-host launcher's executor
+spec embeds a whole ``HostChannel`` spec::
+
+    hosts:channel=ssh:hosts=edge-a;edge-b;edge-c,n=3,retries=2
+
+Two grammar rules make this nest without escaping: the outer grammar
+splits parameters on ``","`` only and takes the *first* ``"="`` of a
+segment as the key/value boundary, so an embedded spec may freely contain
+``":"``, ``"="`` and ``";"``; and the nested channel grammar uses
+``sep=";"`` with ``merge_unkeyed=True`` — a ``";"``-segment without its
+own ``"="`` *continues the previous value* (``"ssh:hosts=a;b;c"`` parses
+to ``{"hosts": "a;b;c"}``), which is what makes ``";"`` double as both
+the channel parameter separator and the host-list separator.
 """
 from __future__ import annotations
 
@@ -36,40 +51,56 @@ def _coerce(raw: str) -> Any:
     return raw.strip()
 
 
-def parse_spec(spec: str) -> Tuple[str, Dict[str, Any]]:
+def parse_spec(spec: str, *, sep: str = ",",
+               merge_unkeyed: bool = False) -> Tuple[str, Dict[str, Any]]:
     """``"mesh:hops=3,paywall=false"`` -> ``("mesh", {"hops": 3, ...})``.
 
     The bare form ``"mesh"`` parses to ``("mesh", {})``. Raises
     :class:`ValueError` on malformed parameter segments (missing ``=``,
     empty key), so registries can surface the offending spec verbatim.
+
+    ``sep``/``merge_unkeyed`` select the *nested channel grammar* (module
+    docstring): parameters split on ``sep`` (``";"`` for channel specs),
+    and with ``merge_unkeyed=True`` a segment without its own ``"="``
+    continues the previous parameter's value — ``"ssh:hosts=a;b;c"``
+    parses to ``("ssh", {"hosts": "a;b;c"})`` instead of erroring. Merged
+    values stay strings (coercion happens once, on the final value).
     """
     if not isinstance(spec, str) or not spec.strip():
         raise ValueError(f"empty transport/policy spec: {spec!r}")
-    name, sep, tail = spec.partition(":")
+    name, colon, tail = spec.partition(":")
     name = name.strip()
-    params: Dict[str, Any] = {}
-    if sep and not tail.strip():
+    raw: Dict[str, str] = {}
+    if colon and not tail.strip():
         raise ValueError(f"spec {spec!r} has a ':' but no parameters")
     if tail.strip():
-        for part in tail.split(","):
+        last_key = None
+        for part in tail.split(sep):
             key, eq, val = part.partition("=")
+            if not eq and merge_unkeyed and last_key is not None \
+                    and part.strip():
+                raw[last_key] = f"{raw[last_key]}{sep}{part.strip()}"
+                continue
             if not eq or not key.strip() or not val.strip():
                 raise ValueError(
                     f"malformed parameter {part!r} in spec {spec!r} "
                     f"(expected key=value)")
-            params[key.strip()] = _coerce(val)
-    return name, params
+            last_key = key.strip()
+            raw[last_key] = val.strip()
+    return name, {k: _coerce(v) for k, v in raw.items()}
 
 
-def format_spec(name: str, params: Dict[str, Any] | None = None) -> str:
-    """Canonical spec string: params sorted by key, bools lowercase."""
+def format_spec(name: str, params: Dict[str, Any] | None = None, *,
+                sep: str = ",") -> str:
+    """Canonical spec string: params sorted by key, bools lowercase.
+    ``sep=";"`` renders the nested channel grammar."""
     if not params:
         return name
     def render(v: Any) -> str:
         if isinstance(v, bool):
             return "true" if v else "false"
         return str(v)
-    body = ",".join(f"{k}={render(params[k])}" for k in sorted(params))
+    body = sep.join(f"{k}={render(params[k])}" for k in sorted(params))
     return f"{name}:{body}"
 
 

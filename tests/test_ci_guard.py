@@ -1,0 +1,39 @@
+"""CI environment guards.
+
+The property suites (partitioner, transports, launcher retry/merge) fall
+back to the deterministic shim in tests/_hypothesis_fallback.py when
+``hypothesis`` is not installed — fine for offline dev boxes, but CI must
+never silently run them degraded. The CI workflow installs real
+hypothesis (requirements-ci.txt); these tests fail red if that install
+regresses. GitHub Actions always sets ``CI=true``, so the guards
+self-activate there and skip locally.
+"""
+import os
+
+import pytest
+
+IN_CI = os.environ.get("CI", "").lower() == "true"
+
+pytestmark = pytest.mark.skipif(
+    not IN_CI, reason="guards the CI environment only (CI=true)")
+
+
+def test_real_hypothesis_is_installed_in_ci():
+    import hypothesis  # noqa: F401 — ImportError = degraded CI
+
+    assert hypothesis.__version__
+
+
+@pytest.mark.parametrize("module", ["test_parallel_sweep", "test_launcher",
+                                    "test_transports"])
+def test_property_suites_bind_real_hypothesis_not_the_shim(module):
+    """The try/except import in each property suite must have resolved to
+    the real library: the shim's ``given`` lives in
+    ``_hypothesis_fallback``, the real one in ``hypothesis.core``."""
+    import importlib
+
+    m = importlib.import_module(module)
+    bound_in = m.given.__module__
+    assert not bound_in.startswith("_hypothesis_fallback"), \
+        f"{module} is running on the fallback shim in CI"
+    assert bound_in.startswith("hypothesis"), bound_in

@@ -1,0 +1,400 @@
+"""Multi-host sweep launcher (DESIGN.md §8): wire-format codecs, channel
+spec grammar, retry/merge fault tolerance (hypothesis property over shard
+failure masks), and real worker-subprocess crash faults.
+
+The hard promise under test: ``parallel="hosts:..."`` merges bitwise
+identical (JSON-identical ``SweepResult``) to the sequential run — clean,
+under arbitrary ≤K per-shard failures, and under a worker SIGKILLed
+mid-shard — because shards are deterministic functions of the partition
+and a retry re-runs the identical payload.
+"""
+import functools
+import json
+import os
+import threading
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # deterministic shim, tests/_hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import launcher
+from repro.core.experiment import SweepResult, get_preset, records_from
+from repro.core.launcher import (CHANNELS, ChannelError, HostChannel,
+                                 HostsExecutor, LauncherError, LocalChannel,
+                                 SlurmChannel, SSHChannel, build_request,
+                                 decode_dataset, encode_dataset, frame_response,
+                                 get_channel, parse_response, run_request)
+from repro.core.parallel import (EXECUTORS, get_executor, partition_runs,
+                                 run_shard_payload)
+from repro.core.registry import format_spec, parse_spec
+from repro.data.synthetic_covtype import Dataset, make_covtype_like
+
+# small dataset: worker spawn cost is import+jit, not data, but the wire
+# payload shrinks from ~11 MB to ~800 KB
+DATA = make_covtype_like(n_total=1400, seed=0)
+WINDOWS = 2
+
+
+@functools.lru_cache(maxsize=None)
+def _grid():
+    """The shared mini-grid: spec, run list, partition, sequential
+    reference JSON, and canned per-shard payloads (computed in-process
+    once — FakeChannel replays them, so retry/merge property examples are
+    instant)."""
+    spec = get_preset("smoke", windows=WINDOWS)
+    runs = spec.configs()
+    labels = [l for l, _ in runs]
+    cfgs = [c for _, c in runs]
+    ref_json = spec.run(DATA).to_json()
+    shards = [s for s in partition_runs(cfgs, 2) if s]
+    canned = []
+    for k, idxs in enumerate(shards):
+        payload, counts = run_shard_payload(
+            [labels[i] for i in idxs], [cfgs[i] for i in idxs], DATA, True)
+        canned.append({"schema": launcher.PAYLOAD_SCHEMA, "shard": k,
+                       "result": payload, "dispatch_counts": counts})
+    return spec, labels, cfgs, shards, ref_json, canned
+
+
+def _merge_to_json(spec, labels, results):
+    return SweepResult(name=spec.name,
+                       records=records_from(labels, results)).to_json()
+
+
+# ---------------------------------------------------------------------------
+# wire format
+# ---------------------------------------------------------------------------
+
+def test_dataset_codec_roundtrip_is_bitwise():
+    back = decode_dataset(encode_dataset(DATA))
+    for name, a, b in zip(Dataset._fields, DATA, back):
+        assert a.dtype == b.dtype and a.shape == b.shape, name
+        assert a.tobytes() == b.tobytes(), f"{name} bits drifted"
+    # and the codec survives a JSON round-trip (the actual wire path)
+    back2 = decode_dataset(json.loads(json.dumps(encode_dataset(DATA))))
+    assert back2.x_train.tobytes() == DATA.x_train.tobytes()
+
+
+def test_response_framing_ignores_stray_stdout():
+    response = {"schema": launcher.PAYLOAD_SCHEMA, "shard": 3,
+                "result": "{}", "dispatch_counts": {}}
+    noisy = "jax warning: blah\n" + frame_response(response)
+    assert parse_response(noisy) == response
+    with pytest.raises(ChannelError, match="sentinel"):
+        parse_response("no frame here at all")
+    with pytest.raises(ChannelError, match="unparseable"):
+        parse_response(f"\n{launcher.RESULT_SENTINEL}\nnot json")
+
+
+def test_run_request_rejects_wrong_schema():
+    with pytest.raises(ValueError, match="schema"):
+        run_request({"schema": 999})
+
+
+# ---------------------------------------------------------------------------
+# channel spec grammar (nested specs, registry.py)
+# ---------------------------------------------------------------------------
+
+def test_nested_spec_grammar_list_continuation():
+    # ";"-separated channel grammar: unkeyed segments continue the value
+    assert parse_spec("ssh:hosts=a;b;c", sep=";", merge_unkeyed=True) == \
+        ("ssh", {"hosts": "a;b;c"})
+    assert parse_spec("slurm:array=4;submit=bash", sep=";",
+                      merge_unkeyed=True) == \
+        ("slurm", {"array": 4, "submit": "bash"})
+    # without merge_unkeyed the same string is malformed (strictness of
+    # the outer grammar is unchanged)
+    with pytest.raises(ValueError):
+        parse_spec("ssh:hosts=a;b;c", sep=";")
+    # the outer grammar carries a whole channel spec as one value
+    assert parse_spec("hosts:channel=ssh:hosts=a;b;c,n=3") == \
+        ("hosts", {"channel": "ssh:hosts=a;b;c", "n": 3})
+    assert format_spec("local", {"n": 4}, sep=";") == "local:n=4"
+
+
+def test_get_channel_resolves_every_builtin():
+    assert sorted(CHANNELS) == ["local", "slurm", "ssh"]
+    assert get_channel("local").slots() == ["local/0", "local/1"]
+    assert get_channel("local:", default_slots=3).slots() == \
+        ["local/0", "local/1", "local/2"]          # trailing ':' tolerated
+    assert get_channel("local:n=1").slots() == ["local/0"]
+    ssh = get_channel("ssh:hosts=edge-a;edge-b")
+    assert ssh.hosts == ["edge-a", "edge-b"]
+    assert ssh.slots() == ["ssh/edge-a", "ssh/edge-b"]
+    slurm = get_channel("slurm:array=8;submit=none")
+    assert (slurm.array, slurm.submit, slurm.batch) == (8, "none", True)
+    with pytest.raises(KeyError):
+        get_channel("teleport")
+    with pytest.raises(KeyError):
+        get_channel("local:bogus=1")
+    with pytest.raises(ValueError):
+        get_channel("ssh:hosts=")      # trailing '=' -> malformed param
+
+
+def test_hosts_executor_registered_in_spec_grammar():
+    assert "hosts" in EXECUTORS
+    ex = get_executor("hosts:channel=local,n=4,retries=2")
+    assert isinstance(ex, HostsExecutor)
+    assert (ex.n, ex.retries) == (4, 2)
+    assert get_executor("hosts:channel=ssh:hosts=a;b;c").channel == \
+        "ssh:hosts=a;b;c"
+    with pytest.raises(ValueError):
+        get_executor("hosts:n=0")
+    with pytest.raises(ValueError):
+        get_executor("hosts:retries=-1")
+
+
+def test_ssh_channel_command_construction():
+    ch = SSHChannel(hosts="a;b", python="python3.11", opts="-p 2222")
+    cmd = ch.command("ssh/b")
+    assert cmd[:3] == ["ssh", "-o", "BatchMode=yes"]
+    assert "-p" in cmd and "2222" in cmd and "b" in cmd
+    assert cmd[-1] == "python3.11 -m repro.core.launcher --worker"
+    # injection env rides the remote command line, not the local env
+    assert SSHChannel(hosts="h").command(
+        "ssh/h", {launcher.INJECT_ENV: "sigkill"})[-1].startswith(
+        f"{launcher.INJECT_ENV}=sigkill ")
+
+
+def test_slurm_stage_writes_requests_and_array_script(tmp_path):
+    ch = SlurmChannel(array=2, dir=str(tmp_path), submit="none")
+    reqs = [build_request(k, ["r"], [_grid()[2][0]], DATA, True)
+            for k in range(3)]
+    script = ch.stage(reqs, str(tmp_path / "b1"))
+    text = open(script).read()
+    assert "#SBATCH --array=0-2%2" in text
+    assert "--input" in text and "--output" in text
+    assert "repro.core.launcher" in text
+    for k in range(3):
+        staged = json.load(open(tmp_path / "b1" / f"shard_{k:04d}.json"))
+        assert staged["schema"] == launcher.PAYLOAD_SCHEMA
+        assert staged["shard"] == k
+    # submit=none: every shard reports pending as a crash ChannelError
+    outs = ch.run_batch(reqs[:1])
+    assert isinstance(outs[0], ChannelError) and outs[0].kind == "crash"
+
+
+def test_slurm_never_collects_stale_results_from_a_previous_batch(tmp_path):
+    """A fresh channel instance pointing at a dir with leftover batches
+    must stage into a new batch dir — a stale result_*.json from an
+    earlier run can never be read back as a fresh shard response."""
+    req = build_request(0, ["r"], [_grid()[2][0]], DATA, True)
+    ch1 = SlurmChannel(dir=str(tmp_path), submit="none")
+    ch1.run_batch([req])
+    # plant a bogus "result" where a naive second run would look
+    with open(tmp_path / "batch_001" / "result_0000.json", "w") as f:
+        json.dump({"schema": launcher.PAYLOAD_SCHEMA, "shard": 0,
+                   "result": "STALE", "dispatch_counts": {}}, f)
+    ch2 = SlurmChannel(dir=str(tmp_path), submit="none")   # _batch_no = 0
+    outs = ch2.run_batch([req])
+    assert isinstance(outs[0], ChannelError), \
+        "stale batch_001 result was collected as fresh"
+    assert "batch_002" in outs[0].detail
+
+
+# ---------------------------------------------------------------------------
+# retry/merge fault tolerance (in-process FakeChannel, canned payloads)
+# ---------------------------------------------------------------------------
+
+class FakeChannel(HostChannel):
+    """Replays canned shard responses, failing scripted (shard, attempt)
+    pairs — exercises the executor's retry/slot/merge machinery without
+    subprocess cost. Thread-safe: shards dispatch concurrently."""
+
+    def __init__(self, canned, fail_plan, n_slots=3):
+        self.canned = canned
+        self.fail_plan = dict(fail_plan)    # (shard, attempt) -> kind
+        self.n_slots = n_slots
+        self._attempts = {}
+        self._lock = threading.Lock()
+
+    def slots(self):
+        return [f"fake/{i}" for i in range(self.n_slots)]
+
+    def run(self, slot, request, *, timeout=None, extra_env=None):
+        shard = request["shard"]
+        with self._lock:
+            attempt = self._attempts[shard] = \
+                self._attempts.get(shard, 0) + 1
+        kind = self.fail_plan.get((shard, attempt))
+        if kind is not None:
+            raise ChannelError(kind, f"scripted {kind} for shard {shard} "
+                               f"attempt {attempt}")
+        return self.canned[shard]
+
+
+def _run_hosts(fail_plan, retries, n_slots=3):
+    spec, labels, cfgs, shards, ref_json, canned = _grid()
+    ch = FakeChannel(canned, fail_plan, n_slots=n_slots)
+    ex = HostsExecutor(channel=ch, n=2, retries=retries, backoff=0.0)
+    results, meta = ex.execute_with_meta(labels, cfgs, DATA, stack=True)
+    return _merge_to_json(spec, labels, results), meta, ref_json
+
+
+@settings(max_examples=20, deadline=None)
+@given(fails=st.tuples(st.integers(min_value=0, max_value=2),
+                       st.integers(min_value=0, max_value=2)),
+       kind_i=st.integers(min_value=0, max_value=2))
+def test_retry_merge_parity_under_any_failure_mask(fails, kind_i):
+    """Property (issue satellite): for every per-shard failure count ≤ K,
+    the merged SweepResult is JSON-identical to the sequential run and
+    the attempt log is complete — k_s failures then one success, slots
+    recorded, statuses faithful."""
+    kind = ("crash", "timeout", "frame")[kind_i]
+    retries = 2
+    fail_plan = {(s, a): kind
+                 for s, k_s in enumerate(fails) for a in range(1, k_s + 1)}
+    got, meta, ref = _run_hosts(fail_plan, retries=retries)
+    assert got == ref, f"merge drifted under failure mask {fails}"
+    log = meta["launcher"]["shards"]
+    assert len(log) == 2
+    for s, k_s in enumerate(fails):
+        attempts = log[s]["attempts"]
+        assert len(attempts) == k_s + 1
+        assert [a["status"] for a in attempts] == [kind] * k_s + ["ok"]
+        assert all(a["slot"].startswith("fake/") for a in attempts)
+        assert [a["attempt"] for a in attempts] == \
+            list(range(1, k_s + 2))
+    assert meta["launcher"]["attempts_total"] == sum(fails) + 2
+
+
+def test_retry_prefers_a_different_surviving_slot():
+    """With free alternative slots, a retry must not land on the slot
+    that just failed."""
+    got, meta, ref = _run_hosts({(0, 1): "crash"}, retries=1, n_slots=4)
+    assert got == ref
+    a = meta["launcher"]["shards"][0]["attempts"]
+    assert a[0]["status"] == "crash" and a[1]["status"] == "ok"
+    assert a[1]["slot"] != a[0]["slot"]
+
+
+def test_exhausted_retries_raise_with_complete_attempt_log():
+    spec, labels, cfgs, shards, ref_json, canned = _grid()
+    ch = FakeChannel(canned, {(1, a): "crash" for a in range(1, 4)})
+    ex = HostsExecutor(channel=ch, n=2, retries=1, backoff=0.0)
+    with pytest.raises(LauncherError, match="retry budget 1 exhausted") \
+            as ei:
+        ex.execute_with_meta(labels, cfgs, DATA, stack=True)
+    assert len(ei.value.attempts) == 2
+    assert all(a["status"] == "crash" for a in ei.value.attempts)
+
+
+def test_mismatched_shard_response_is_a_frame_failure_then_retries():
+    """A response claiming the wrong shard id is a 'frame' failure; the
+    retry must still converge to parity."""
+    spec, labels, cfgs, shards, ref_json, canned = _grid()
+
+    class SwappedOnce(FakeChannel):
+        def run(self, slot, request, *, timeout=None, extra_env=None):
+            response = super().run(slot, request, timeout=timeout,
+                                   extra_env=extra_env)
+            if request["shard"] == 0 and \
+                    self._attempts[request["shard"]] == 1:
+                return dict(response, shard=1)
+            return response
+
+    ex = HostsExecutor(channel=SwappedOnce(canned, {}), n=2, retries=1,
+                       backoff=0.0)
+    results, meta = ex.execute_with_meta(labels, cfgs, DATA, stack=True)
+    assert _merge_to_json(spec, labels, results) == ref_json
+    assert meta["launcher"]["shards"][0]["attempts"][0]["status"] == "frame"
+
+
+def test_batch_channel_retries_only_failed_shards():
+    """Batch (slurm-shaped) dispatch: a failed shard is re-batched alone;
+    already-successful shards are not re-run."""
+    spec, labels, cfgs, shards, ref_json, canned = _grid()
+    calls = []
+
+    class FakeBatch(HostChannel):
+        batch = True
+
+        def run_batch(self, requests, *, timeout=None):
+            calls.append([r["shard"] for r in requests])
+            outs = []
+            for r in requests:
+                if r["shard"] == 1 and len(calls) == 1:
+                    outs.append(ChannelError("crash", "scripted"))
+                else:
+                    outs.append(canned[r["shard"]])
+            return outs
+
+        def slots(self):
+            return ["fake/batch"]
+
+    ex = HostsExecutor(channel=FakeBatch(), n=2, retries=1, backoff=0.0)
+    results, meta = ex.execute_with_meta(labels, cfgs, DATA, stack=True)
+    assert _merge_to_json(spec, labels, results) == ref_json
+    assert calls == [[0, 1], [1]]
+    assert [a["status"] for a in
+            meta["launcher"]["shards"][1]["attempts"]] == ["crash", "ok"]
+
+
+# ---------------------------------------------------------------------------
+# SweepResult.meta stays out of the parity surface
+# ---------------------------------------------------------------------------
+
+def test_sweep_result_meta_excluded_from_json_and_equality():
+    spec, labels, cfgs, shards, ref_json, canned = _grid()
+    ex = HostsExecutor(channel=FakeChannel(canned, {}), n=2, retries=0)
+    results, meta = ex.execute_with_meta(labels, cfgs, DATA, stack=True)
+    r = SweepResult(name=spec.name,
+                    records=records_from(labels, results))
+    r.meta.update(meta)
+    assert r.to_json() == ref_json                  # meta never serialized
+    assert r == SweepResult.from_json(ref_json)     # nor compared
+    with_meta = json.loads(r.to_json(include_meta=True))
+    assert with_meta["meta"]["launcher"]["n_shards"] == 2
+    assert SweepResult.from_json(
+        r.to_json(include_meta=True)).meta["launcher"]["n_shards"] == 2
+
+
+# ---------------------------------------------------------------------------
+# real subprocess faults (the issue's crash test: worker SIGKILLed
+# mid-shard) — one worker spawn per attempt, so keep the grid tiny
+# ---------------------------------------------------------------------------
+
+def test_local_channel_crash_fault_parity():
+    """End to end over real ``local:`` workers with shard 0's first
+    attempt SIGKILLed mid-shard (request parsed, dataset decoded, no
+    response): the retried shard must restore bitwise parity and the
+    attempt log must show crash -> ok."""
+    spec, labels, cfgs, shards, ref_json, canned = _grid()
+    r = spec.run(DATA,
+                 parallel="hosts:channel=local,n=2,retries=1,"
+                          "backoff=0.01,inject_kill=0")
+    assert r.to_json() == ref_json
+    log = r.meta["launcher"]["shards"]
+    statuses0 = [a["status"] for a in log[0]["attempts"]]
+    assert statuses0 == ["crash", "ok"]
+    assert "SIGKILL" in log[0]["attempts"][0]["error"] or \
+        "exited" in log[0]["attempts"][0]["error"]
+    assert [a["status"] for a in log[1]["attempts"]] == ["ok"]
+
+
+@pytest.mark.slow
+def test_local_channel_clean_parity_both_stack_modes():
+    spec, labels, cfgs, shards, ref_json, canned = _grid()
+    for stack in ("auto", "off"):
+        ref = spec.run(DATA, stack=stack).to_json()
+        got = spec.run(DATA, stack=stack,
+                       parallel="hosts:channel=local,n=2")
+        assert got.to_json() == ref, f"hosts backend drifted (stack={stack})"
+
+
+@pytest.mark.slow
+def test_slurm_bash_simulation_parity(tmp_path):
+    """The full slurm file flow with the array simulated locally
+    (``submit=bash``): staged request files -> the emitted script's
+    file-mode workers -> collected result files -> bitwise merge."""
+    spec, labels, cfgs, shards, ref_json, canned = _grid()
+    ch = SlurmChannel(array=2, dir=str(tmp_path), submit="bash")
+    ex = HostsExecutor(channel=ch, n=2, retries=0, backoff=0.0)
+    results, meta = ex.execute_with_meta(labels, cfgs, DATA, stack=True)
+    assert _merge_to_json(spec, labels, results) == ref_json
+    assert all(a["status"] == "ok"
+               for s in meta["launcher"]["shards"] for a in s["attempts"])
+    assert os.path.exists(tmp_path / "batch_001" / "launch_array.sh")

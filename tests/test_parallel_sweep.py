@@ -191,7 +191,7 @@ def test_partitioner_smoke_grid_layout():
 def test_executor_registry_spec_grammar():
     assert get_executor("none") is get_executor("none")
     assert get_executor("devices:n=8") is get_executor("devices:n=8")
-    assert sorted(EXECUTORS) == ["devices", "none", "processes"]
+    assert sorted(EXECUTORS) == ["devices", "hosts", "none", "processes"]
     with pytest.raises(KeyError):
         get_executor("warpdrive")
     with pytest.raises(KeyError):          # unknown parameter name
