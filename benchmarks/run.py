@@ -194,6 +194,121 @@ def bench_stacked_sweep(quick: bool):
     return rows
 
 
+def bench_fleet_scaling(quick: bool):
+    """Million-DC fleet engine (DESIGN.md §10): wall-clock and bytes/DC
+    across fleet sizes, scan engine vs per-window execution. Two
+    per-window comparators: the PR-1 fleet engine driven one window at a
+    time (per-DC Python objects + O(L^2) pairwise ledger events — measured
+    up to 10^3 DCs, quadratically extrapolated above, where a single
+    window already costs minutes) and the host-driven city round
+    (run_city_perwindow: host draw/pack/upload + one dispatch + one sync
+    per window). Writes results/benchmarks/fleet_scaling.json."""
+    import resource
+
+    from benchmarks.paper_tables import RESULTS_DIR
+    from repro.core.cityscan import (city_fleet_pad, run_city,
+                                     run_city_perwindow)
+    from repro.core.energy import Ledger
+    from repro.core.fleet import run_window_star
+    from repro.core.htl import DC
+    from repro.core.scenario import ScenarioConfig
+    from repro.data.synthetic_covtype import NUM_CLASSES, make_covtype_like
+
+    data = make_covtype_like(seed=0)
+    W = 3 if quick else 6
+    sizes = (100, 1000, 10_000) if quick else (100, 1000, 10_000, 100_000)
+    fleet_measure_max = 1000
+    K, iters = 4, 6
+    x = data.x_train.astype(np.float32)
+    y = data.y_train.astype(np.int32)
+    F = x.shape[1]
+
+    def fleet_engine_window_s(L):
+        rng = np.random.default_rng(0)
+        idx = rng.integers(0, len(y), size=(L, K))
+        dcs = [DC(f"SM{i + 1}", x[idx[i]], y[idx[i]]) for i in range(L)]
+
+        def once(prev):
+            return run_window_star(dcs, prev, Ledger(), "wifi", cap=160,
+                                   num_classes=NUM_CLASSES,
+                                   n_subsample=None,
+                                   rng=np.random.default_rng(1))
+        prev = once(None)                  # warm the jit at this shape
+        t0 = time.time()
+        once(prev)
+        return time.time() - t0
+
+    fleet_window_s = {}
+    for L in sizes:
+        if L <= fleet_measure_max:
+            fleet_window_s[L] = (fleet_engine_window_s(L), True)
+        else:
+            # O(L^2) pairwise ledger events dominate: scale the largest
+            # measured size quadratically (documented as extrapolated)
+            base_L = max(k for k in fleet_window_s)
+            base_s = fleet_window_s[base_L][0]
+            fleet_window_s[L] = (base_s * (L / base_L) ** 2, False)
+
+    rows = []
+    per_size = {}
+    for L in sizes:
+        cfg = ScenarioConfig(windows=W, eval_every=1, algo="star",
+                             engine="scan", tech="wifi", fleet_size=L,
+                             obs_per_dc=K, train_iters=iters)
+        run_city(cfg, data)                # warm (compile at this shape)
+        t0 = time.time()
+        r_scan = run_city(cfg, data)
+        scan_s = time.time() - t0
+        run_city_perwindow(cfg, data)
+        t0 = time.time()
+        run_city_perwindow(cfg, data)
+        pw_s = time.time() - t0
+        fw_s, measured = fleet_window_s[L]
+        speedup_fleet = fw_s * W / scan_s
+        per_size[str(L)] = {
+            "padded_dcs": city_fleet_pad(L),
+            "scan_wall_s": round(scan_s, 4),
+            "scan_per_window_s": round(scan_s / W, 4),
+            "perwindow_city_wall_s": round(pw_s, 4),
+            "fleet_engine_window_s": round(fw_s, 4),
+            "fleet_engine_measured": measured,
+            "speedup_scan_vs_fleet_engine": round(speedup_fleet, 1),
+            "speedup_scan_vs_perwindow_city": round(pw_s / scan_s, 2),
+            "peak_rss_mb": round(
+                resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0,
+                1),
+            "final_f1": round(r_scan.f1_curve[-1], 4),
+        }
+        tag = "" if measured else "(extrap)"
+        rows.append((f"fleet_scaling_L{L}", scan_s * 1e6,
+                     f"perwindow_s={pw_s:.2f} "
+                     f"fleet_window_s={fw_s:.1f}{tag} "
+                     f"speedup_vs_fleet={speedup_fleet:.0f}x "
+                     f"({W} windows)"))
+
+    payload = {
+        "windows": W,
+        "obs_per_dc": K,
+        "train_iters": iters,
+        "sizes": list(sizes),
+        "per_size": per_size,
+        # device-resident footprint per DC inside the scan (window block
+        # x/y/m + base model) — constant across fleet sizes AND windows
+        "scan_device_bytes_per_dc": 4 * (K * F + 2 * K
+                                         + (F + 1) * NUM_CLASSES),
+        # the per-window pattern re-uploads every DC's x/y/m each window
+        "perwindow_upload_bytes_per_dc_per_window": 4 * (K * F + 2 * K),
+        "note": "fleet_engine_window_s beyond 1000 DCs is extrapolated "
+                "quadratically from the largest measured size (pairwise "
+                "ledger events are O(L^2)); peak_rss_mb is the process "
+                "high-water mark, sizes run in increasing order",
+    }
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "fleet_scaling.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+    return rows
+
+
 def bench_sweep_api(quick: bool):
     """Experiment-API smoke + timing: a tiny ``SweepSpec`` preset end to
     end through ``SweepSpec.run``, asserting the ``SweepResult`` JSON
@@ -448,7 +563,8 @@ def main():
     print("name,us_per_call,derived")
     sections = [bench_sweep_api, bench_parallel_sweep,
                 bench_hosts_launcher, bench_greedytl,
-                bench_fleet_engine, bench_stacked_sweep, bench_kernels,
+                bench_fleet_engine, bench_stacked_sweep,
+                bench_fleet_scaling, bench_kernels,
                 bench_htl_trainer, bench_dryrun_summary]
     if not args.skip_tables:
         sections.insert(

@@ -1,0 +1,104 @@
+#!/usr/bin/env python
+"""City-smoke CI gate: the 10^5-DC city preset must complete on 8 fake CPU
+devices with peak memory independent of the window count.
+
+The scan engine keeps per-window buffers scan-local, so doubling or
+tripling ``windows`` must not grow peak RSS: the gate runs the preset at a
+baseline window count first, then at the full window count, and asserts
+the cumulative peak-RSS high-water mark barely moves (``ru_maxrss`` only
+ever grows, so ordering baseline-first makes the ratio meaningful). A
+per-window execution pattern — materializing ``(W, L, K, F)`` host blocks
+or keeping per-window device buffers alive — fails the ratio.
+
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \\
+        python scripts/city_smoke.py --fleet-size 100000 --windows 6 \\
+        --baseline-windows 2 --expect-devices 8
+
+Wired into scripts/verify.sh and the CI ``city-smoke`` step.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import resource
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def peak_rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fleet-size", type=int, default=100_000)
+    ap.add_argument("--windows", type=int, default=6)
+    ap.add_argument("--baseline-windows", type=int, default=2)
+    ap.add_argument("--max-ratio", type=float, default=1.15,
+                    help="allowed peak-RSS growth from baseline to full "
+                         "window count")
+    ap.add_argument("--expect-devices", type=int, default=0,
+                    help="fail unless jax sees exactly this many devices "
+                         "(guards the XLA_FLAGS fake-device recipe)")
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.core.dispatch import dispatch_counts, reset_dispatch_counts
+    from repro.core.experiment import get_preset
+    from repro.data.synthetic_covtype import make_covtype_like
+
+    n_dev = len(jax.devices())
+    print(f"devices={n_dev} backend={jax.default_backend()}")
+    if args.expect_devices and n_dev != args.expect_devices:
+        print(f"FAIL: expected {args.expect_devices} devices (did "
+              f"XLA_FLAGS=--xla_force_host_platform_device_count get set "
+              f"before jax initialized?)")
+        return 1
+
+    data = make_covtype_like(seed=0)
+    curves = {}
+    peaks = {}
+    for w in (args.baseline_windows, args.windows):
+        spec = get_preset("city", fleet_size=args.fleet_size, windows=w)
+        reset_dispatch_counts()
+        t0 = time.time()
+        result = spec.run(data)
+        dt = time.time() - t0
+        counts = dispatch_counts()
+        peaks[w] = peak_rss_mb()
+        curves[w] = result.records[0].f1_curve
+        print(f"windows={w}: {dt:.1f}s peak_rss={peaks[w]:.0f}MB "
+              f"dispatches={counts} f1={[round(v, 3) for v in curves[w]]}")
+        if counts.get("city_scan", 0) != 1:
+            print(f"FAIL: expected exactly 1 city_scan dispatch, "
+                  f"got {counts}")
+            return 1
+
+    rc = 0
+    ratio = peaks[args.windows] / peaks[args.baseline_windows]
+    if ratio > args.max_ratio:
+        print(f"FAIL: peak RSS grew {ratio:.3f}x from "
+              f"{args.baseline_windows} to {args.windows} windows "
+              f"(allowed {args.max_ratio}x) — memory is not flat in the "
+              f"window count")
+        rc = 1
+    full = curves[args.windows]
+    if len(full) != args.windows or not all(0.0 < v <= 1.0 for v in full):
+        print(f"FAIL: malformed F1 curve {full}")
+        rc = 1
+    if full[-1] < 0.15:
+        print(f"FAIL: final F1 {full[-1]:.3f} below sanity floor — the "
+              f"city fleet did not learn")
+        rc = 1
+    if rc == 0:
+        print(f"city smoke: OK ({args.fleet_size} DCs, flat memory "
+              f"{ratio:.3f}x <= {args.max_ratio}x, final F1 "
+              f"{full[-1]:.3f})")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,68 @@
+#!/usr/bin/env python
+"""Scan-engine parity CI gate: the scan-over-windows engine may never
+change the numbers.
+
+Runs a preset grid on the PR-1 fleet engine (sequential — the parity
+oracle) and again on the scan engine (one jitted lax.scan dispatch per
+scenario), then diffs the serialized ``SweepResult`` JSON byte for byte.
+The records differ only in the declared ``cfg.engine`` field, which is
+normalized before the diff; everything observable — F1 curves, every
+energy-ledger event, order included — must be identical. Exits non-zero
+on any mismatch.
+
+    python scripts/scan_parity.py --preset smoke --windows 4
+    python scripts/scan_parity.py --preset transport_grid --windows 5
+
+Wired into scripts/verify.sh and .github/workflows/ci.yml.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def first_diff(a: str, b: str, context: int = 60) -> str:
+    k = next((i for i, (x, y) in enumerate(zip(a, b)) if x != y),
+             min(len(a), len(b)))
+    return (f"first divergence at byte {k}: "
+            f"...{a[max(0, k - context):k + context]!r} vs "
+            f"...{b[max(0, k - context):k + context]!r}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="smoke")
+    ap.add_argument("--windows", type=int, default=4)
+    args = ap.parse_args()
+
+    from repro.core.experiment import SweepResult, get_preset
+    from repro.data.synthetic_covtype import make_covtype_like
+
+    data = make_covtype_like(seed=0)
+    # stack="off": the sequential fleet engine is the validated oracle
+    # (stacked fleet runs agree with it only to engine-parity tolerance)
+    ref = get_preset(args.preset, windows=args.windows,
+                     engine="fleet").run(data, stack="off").to_json()
+    scan = get_preset(args.preset, windows=args.windows,
+                      engine="scan").run(data, stack="off")
+    normalized = SweepResult(
+        name=scan.name,
+        records=[dataclasses.replace(
+            r, cfg=dataclasses.replace(r.cfg, engine="fleet"))
+            for r in scan.records])
+    got = normalized.to_json()
+    if got != ref:
+        print(f"scan parity {args.preset}: MISMATCH — "
+              f"{first_diff(ref, got)}")
+        return 1
+    print(f"scan parity {args.preset}: OK ({len(ref)} bytes identical, "
+          f"{len(scan.records)} runs, {args.windows} windows)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -63,6 +63,15 @@ if [[ "$MODE" == "all" || "$MODE" == "gates" ]]; then
     # SIGKILLed mid-shard on its first attempt (DESIGN.md §8)
     python scripts/hosts_parity.py --preset smoke --windows 3 \
         --spec "hosts:channel=local,n=2,retries=1" --inject-failures
+    # scan-engine parity: the scan-over-windows engine's SweepResult JSON
+    # must be byte-identical to the sequential fleet engine (DESIGN.md §10)
+    python scripts/scan_parity.py --preset smoke --windows 4
+    python scripts/scan_parity.py --preset transport_grid --windows 5
+    # city-smoke: the 10^5-DC city preset on 8 fake CPU devices, peak
+    # memory flat in the window count (DESIGN.md §10)
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+        python scripts/city_smoke.py --fleet-size 100000 --windows 6 \
+        --baseline-windows 2 --expect-devices 8
 fi
 
 if [[ "$MODE" == "all" || "$MODE" == "bench" ]]; then

@@ -1,0 +1,560 @@
+"""Million-DC fleet engine: scan-over-windows + shard_map'd DC axis.
+
+Two engines live here, both collapsing a whole scenario into O(1) jitted
+dispatches (the fleet engine of :mod:`repro.core.fleet` still drives each
+window from Python and round-trips fleet state host<->device per window):
+
+**Paper-scale scan engine** (``engine="scan"``, :func:`run_scenario_scan`).
+A host-side *planner* replays the scenario's host work exactly as the fleet
+engine would — same rng consumption order (collection, then GreedyTL
+subsampling), same per-pair ledger events in the same order, same AP/center
+election and single-DC early exits — but instead of dispatching per window
+it packs every window's padded fleet blocks into ``(W, ...)`` arrays. One
+jitted ``lax.scan`` over windows then fuses base training -> GreedyTL
+refine -> EMA into a single carried fleet state ``(w_global, has_global)``,
+and evaluation is *streamed*: each window emits an integer confusion matrix
+(exact in f32 — counts < 2^24), from which the host recovers the paper's
+F1 bitwise (:func:`repro.core.metrics.f_measure_from_confusion`). Ledgers
+are host-replayed and therefore exactly equal; F1 parity is at prediction
+level (weights agree to float roundoff; the scan-vs-fleet SweepResult JSON
+gate in scripts/scan_parity.py pins equality on the smoke and
+transport_grid presets).
+
+**City engine** (``engine="scan"`` + ``fleet_size``, :func:`run_city`).
+The 10^5-DC smart-city scenario the paper motivates but never runs: a
+StarHTL fleet of ``fleet_size`` DCs, each drawing ``obs_per_dc``
+observations per window *on device* (per-DC ``fold_in`` PRNG keys, so the
+draw is shard-count invariant), sharded over the DC mesh axis
+(:func:`repro.sharding.partitioning.fleet_mesh`) with
+``jax.experimental.shard_map``. No per-DC Python objects exist; fleet
+state stays device-resident across the whole scan; cross-shard reductions
+are exact (one-hot ``psum`` for the source pool and center dataset,
+lexicographic max for the entropy election), so shard counts 1..8 produce
+bitwise-identical results (tests/test_cityscan.py). Energy is charged
+analytically: per-role-pair transfer counts from the transport layer times
+combinatorial multiplicities — O(1) ledger events per window instead of
+the loop/fleet engines' O(L^2). Memory is flat in both window count (scan
+reuses one window's buffers) and — per DC — fleet size.
+
+The DC axis is bucket-padded with the PR-1/2 machinery
+(:func:`repro.core.fleet.fleet_cap`, multiples of 32) so Poisson fleet
+sizes never recompile, and shard counts divide every padded capacity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache, partial
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import htl
+from repro.core.dispatch import count_dispatch
+from repro.core.energy import (INDEX_BYTES, Ledger, MODEL_BYTES, OBS_BYTES)
+from repro.core.fleet import fleet_cap
+from repro.core.greedytl import _greedytl
+from repro.core.htl import DC, M_CAP, apply_aggregation_heuristic
+from repro.core.metrics import f_measure_from_confusion
+from repro.core.svm import _train_svm, pad_local, sample_cap
+from repro.core.topology import Node, Topology, fleet_nodes, get_transport
+from repro.data.synthetic_covtype import Dataset, NUM_CLASSES
+from repro.sharding.partitioning import FLEET_AXIS, dc_shards, fleet_mesh
+
+
+# ---------------------------------------------------------------------------
+# shared eval plumbing: device test arrays come from the scenario module's
+# EvalCache (lazy import; scenario.py imports this module lazily too)
+# ---------------------------------------------------------------------------
+
+def _eval_arrays(data: Dataset):
+    from repro.core.scenario import _eval_cache
+    x_test = _eval_cache.array(
+        data, "test", lambda d: jnp.asarray(d.x_test.astype(np.float32)))
+    y_oh = _eval_cache.array(
+        data, "test_onehot",
+        lambda d: jnp.asarray(np.eye(NUM_CLASSES, dtype=np.float32)
+                              [np.asarray(d.y_test, np.int64)]))
+    return x_test, y_oh
+
+
+def _train_arrays(data: Dataset):
+    from repro.core.scenario import _eval_cache
+    xtr = _eval_cache.array(
+        data, "train_x", lambda d: jnp.asarray(d.x_train.astype(np.float32)))
+    ytr = _eval_cache.array(
+        data, "train_y", lambda d: jnp.asarray(d.y_train.astype(np.int32)))
+    return xtr, ytr
+
+
+def _f1_curve(cms: np.ndarray, eval_every: int) -> List[float]:
+    """Streamed F1: per-window integer confusion counts -> paper F1."""
+    out = []
+    for t in range(cms.shape[0]):
+        if (t + 1) % eval_every == 0:
+            out.append(f_measure_from_confusion(cms[t].astype(np.int64)))
+    return out
+
+
+def _window_cm(w, x_test, y_oh, num_classes: int):
+    """One window's streamed eval: confusion counts, exact in f32."""
+    scores = x_test @ w[:-1] + w[-1]
+    pred = jax.nn.one_hot(jnp.argmax(scores, axis=-1), num_classes)
+    return y_oh.T @ pred
+
+
+# ---------------------------------------------------------------------------
+# paper-scale scan engine: host-replay planner
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _WindowPlan:
+    live: List[DC]                 # non-empty DCs, fleet-engine order
+    refine: List[DC]               # a2a: per-DC subsampled; star: [center]
+    n_pool: int = 0                # base models entering the source pool
+    prev_slot: int = -1            # pool slot of the previous global model
+    single: bool = False
+
+
+def _plan_scenario(cfg, data: Dataset) -> Tuple[List[_WindowPlan], Ledger]:
+    """Replay every window's host-side work exactly as run_scenario with the
+    fleet engine would: identical rng consumption order (collection policy,
+    then per-DC subsampling), identical ledger events in identical order
+    (collection; then per-pair m0 exchange / entropy index / center id /
+    gather events through the same Topology patterns), identical AP/center
+    election and single-DC early exits. Only the jitted numerics are left
+    for the scan program."""
+    from repro.core.scenario import collect_window
+
+    rng = np.random.default_rng(cfg.seed)
+    ledger = Ledger()
+    n_total = cfg.windows * cfg.obs_per_window
+    order = rng.permutation(len(data.y_train))[:n_total]
+    sx = data.x_train[order].astype(np.float32)
+    sy = data.y_train[order].astype(np.int32)
+
+    plans: List[_WindowPlan] = []
+    prev_exists = False
+    for t in range(cfg.windows):
+        s = slice(t * cfg.obs_per_window, (t + 1) * cfg.obs_per_window)
+        dcs = collect_window(cfg, rng, sx[s], sy[s], ledger)
+        if cfg.aggregate:
+            dcs = apply_aggregation_heuristic(dcs, ledger, cfg.tech)
+        live = [d for d in dcs if d.n > 0]
+        if not live:
+            plans.append(_WindowPlan([], []))
+            continue
+        if len(live) == 1:
+            plans.append(_WindowPlan(live, [], single=True))
+            prev_exists = True
+            continue
+        ap = htl._ap_name(live)
+        topo = Topology(ledger, cfg.tech, fleet_nodes(live, ap))
+        if cfg.algo == "a2a":
+            topo.exchange_all(MODEL_BYTES, what="m0 exchange")
+            refine = [htl._subsample(d, cfg.n_subsample, NUM_CLASSES, rng)
+                      for d in live]
+            center = next((d for d in live if d.name == ap), live[0])
+            topo.gather(topo.node(center.name), MODEL_BYTES, what="m1 gather")
+        else:
+            topo.exchange_all(INDEX_BYTES, what="entropy index")
+            c_idx = int(np.argmax([htl.label_entropy(d.y, NUM_CLASSES)
+                                   for d in live]))
+            center = live[c_idx]
+            topo.broadcast(topo.node(center.name), INDEX_BYTES,
+                           what="center id")
+            topo.gather(topo.node(center.name), MODEL_BYTES,
+                        what="m0 to center")
+            refine = [htl._subsample(center, cfg.n_subsample, NUM_CLASSES,
+                                     rng)]
+        n_pool = min(len(live), M_CAP)
+        prev_slot = len(live) if (prev_exists and len(live) < M_CAP) else -1
+        plans.append(_WindowPlan(live, refine, n_pool, prev_slot))
+        prev_exists = True
+    return plans, ledger
+
+
+def _pack_plan(cfg, plans: List[_WindowPlan]) -> dict:
+    """Second pass: pad every window onto one stable (W, ...) block layout
+    — DC axis at the bucketed fleet capacity, samples at the max bucketed
+    sample capacity over all windows — so one scan program serves every
+    Poisson draw of the scenario."""
+    W = cfg.windows
+    F = NUM_CLASSES  # placeholder; fixed below from data
+    max_live = max([len(p.live) for p in plans] + [1])
+    L = fleet_cap(max_live)
+    cap = max([sample_cap(d.n, cfg.cap) for p in plans for d in p.live]
+              + [sample_cap(1, cfg.cap)])
+    rcap = max([sample_cap(d.n, cfg.cap) for p in plans for d in p.refine]
+               + [sample_cap(1, cfg.cap)])
+    feats = [d.x.shape[1] for p in plans for d in p.live]
+    F = feats[0] if feats else 1
+
+    xb = np.zeros((W, L, cap, F), np.float32)
+    yb = np.zeros((W, L, cap), np.int32)
+    mb = np.zeros((W, L, cap), np.float32)
+    dcm = np.zeros((W, L), np.float32)
+    src_base = np.zeros((W, M_CAP), np.float32)
+    src_prev = np.zeros((W, M_CAP), np.float32)
+    n_live = np.zeros((W,), np.float32)
+    learn = np.zeros((W,), bool)
+    single = np.zeros((W,), bool)
+    if cfg.algo == "a2a":
+        xr = np.zeros((W, L, rcap, F), np.float32)
+        yr = np.zeros((W, L, rcap), np.int32)
+        mr = np.zeros((W, L, rcap), np.float32)
+    else:
+        xr = np.zeros((W, rcap, F), np.float32)
+        yr = np.zeros((W, rcap), np.int32)
+        mr = np.zeros((W, rcap), np.float32)
+
+    for t, p in enumerate(plans):
+        for i, d in enumerate(p.live):
+            xb[t, i], yb[t, i], mb[t, i] = pad_local(d.x, d.y, cap)
+            dcm[t, i] = 1.0
+        n_live[t] = len(p.live)
+        learn[t] = bool(p.live)
+        single[t] = p.single
+        if p.single or not p.live:
+            continue
+        src_base[t, :p.n_pool] = 1.0
+        if p.prev_slot >= 0:
+            src_prev[t, p.prev_slot] = 1.0
+        if cfg.algo == "a2a":
+            for i, d in enumerate(p.refine):
+                xr[t, i], yr[t, i], mr[t, i] = pad_local(d.x, d.y, rcap)
+        else:
+            xr[t], yr[t], mr[t] = pad_local(p.refine[0].x, p.refine[0].y,
+                                            rcap)
+    return {"xb": xb, "yb": yb, "mb": mb, "dcm": dcm, "xr": xr, "yr": yr,
+            "mr": mr, "src_base": src_base, "src_prev": src_prev,
+            "n_live": n_live, "learn": learn, "single": single}
+
+
+# ---------------------------------------------------------------------------
+# paper-scale scan engine: the jitted program
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _scan_program(algo: str, num_classes: int, iters: int):
+    """One jitted lax.scan over windows; jit re-specializes per block shape
+    (W, L, cap, rcap), all of which are bucketed, so the executable cache
+    stays small across a sweep."""
+
+    def body(carry, inp, eta, x_test, y_oh):
+        w, has_g = carry
+        base = jax.vmap(
+            lambda xi, yi, mi: _train_svm(xi, yi, mi,
+                                          num_classes=num_classes,
+                                          iters=iters)
+        )(inp["xb"], inp["yb"], inp["mb"])               # (L, F+1, C)
+        L = base.shape[0]
+        basep = (base[:M_CAP] if L >= M_CAP else
+                 jnp.concatenate([base, jnp.zeros((M_CAP - L,) +
+                                                  base.shape[1:])], axis=0))
+        # masked pool build is exact: x + 0 == x bitwise
+        src = (basep * inp["src_base"][:, None, None]
+               + w[None] * inp["src_prev"][:, None, None])
+        src_mask = inp["src_base"] + inp["src_prev"]
+        if algo == "a2a":
+            refined = jax.lax.map(
+                lambda t3: _greedytl(t3[0], t3[1], t3[2], src, src_mask,
+                                     num_classes=num_classes)[0],
+                (inp["xr"], inp["yr"], inp["mr"]))       # (L, F+1, C)
+            nl = jnp.maximum(inp["n_live"], 1.0)
+            multi_new = jnp.einsum("l,lfc->fc", inp["dcm"], refined) / nl
+        else:
+            multi_new = _greedytl(inp["xr"], inp["yr"], inp["mr"], src,
+                                  src_mask, num_classes=num_classes)[0]
+        single_new = jnp.where(has_g, 0.5 * (base[0] + w), base[0])
+        new = jnp.where(inp["single"], single_new, multi_new)
+        upd = jnp.where(has_g, (1.0 - eta) * w + eta * new, new)
+        w2 = jnp.where(inp["learn"], upd, w)
+        has2 = has_g | inp["learn"]
+        cm = _window_cm(w2, x_test, y_oh, num_classes)
+        return (w2, has2), cm
+
+    @jax.jit
+    def program(inputs, eta, x_test, y_oh):
+        F = inputs["xb"].shape[-1]
+        w0 = jnp.zeros((F + 1, num_classes), jnp.float32)
+        carry0 = (w0, jnp.asarray(False))
+        _, cms = jax.lax.scan(
+            partial(body, eta=eta, x_test=x_test, y_oh=y_oh),
+            carry0, inputs)
+        return cms
+
+    return program
+
+
+@count_dispatch("scan_windows")
+def _dispatch_scan(program, inputs, eta, x_test, y_oh):
+    return program(inputs, eta, x_test, y_oh)
+
+
+def run_scenario_scan(cfg, data: Dataset):
+    """The whole scenario as ONE jitted dispatch (parity path of the scan
+    engine — ledgers exactly equal to the fleet engine's, F1 through the
+    streamed confusion counts)."""
+    from repro.core.scenario import ScenarioResult
+
+    plans, ledger = _plan_scenario(cfg, data)
+    inputs = jax.tree.map(jnp.asarray, _pack_plan(cfg, plans))
+    x_test, y_oh = _eval_arrays(data)
+    program = _scan_program(cfg.algo, NUM_CLASSES, cfg.train_iters)
+    cms = np.asarray(_dispatch_scan(program, inputs,
+                                    jnp.float32(cfg.global_update_rate),
+                                    x_test, y_oh))
+    return ScenarioResult(_f1_curve(cms, cfg.eval_every), ledger, cfg)
+
+
+# ---------------------------------------------------------------------------
+# city engine: 10^5-DC StarHTL, device-resident, shard_map'd DC axis
+# ---------------------------------------------------------------------------
+
+def city_fleet_pad(fleet_size: int) -> int:
+    """Padded city DC capacity: the PR-1 bucket policy (multiples of 32),
+    which every power-of-two shard count <= 32 divides."""
+    return fleet_cap(fleet_size)
+
+
+def _city_round(w, has_g, x, y, m, valid, gid, l0, eta, x_test, y_oh, *,
+                num_classes: int, iters: int, shards: int):
+    """One city StarHTL round; identical math sharded or not. ``x``/``y``/
+    ``m`` are this window's per-DC datasets (local shard rows), ``gid`` the
+    global DC ids. All cross-DC combination is either an exact one-hot psum
+    (source pool, center dataset) or a lexicographic max (entropy election),
+    so the round is bitwise shard-count invariant."""
+    K = x.shape[1]
+    base = jax.vmap(
+        lambda xi, yi, mi: _train_svm(xi, yi, mi, num_classes=num_classes,
+                                      iters=iters))(x, y, m)
+
+    # entropy-based center election (paper Sec. 4), lexicographic tie-break
+    # on the global DC id so every shard layout elects the same center
+    cnt = jnp.sum(jax.nn.one_hot(y, num_classes) * m[:, :, None], axis=1)
+    tot = jnp.maximum(jnp.sum(cnt, axis=1), 1.0)
+    p = cnt / tot[:, None]
+    ent = -jnp.sum(jnp.where(p > 0, p * jnp.log(p), 0.0), axis=1) \
+        / jnp.log(float(num_classes))
+    ent = jnp.where(valid, ent, -1.0)
+    li = jnp.argmax(ent)                       # first max = lowest local gid
+    ce, cg = ent[li], gid[li]
+    if shards > 1:
+        es = jax.lax.all_gather(ce, FLEET_AXIS)
+        gs = jax.lax.all_gather(cg, FLEET_AXIS)
+        ce, cg = es[0], gs[0]
+        for i in range(1, shards):
+            better = (es[i] > ce) | ((es[i] == ce) & (gs[i] < cg))
+            ce = jnp.where(better, es[i], ce)
+            cg = jnp.where(better, gs[i], cg)
+
+    # source pool: base models of the first min(L0, M_CAP) DCs, gathered by
+    # exact one-hot psum (x + 0 == x bitwise)
+    slot = jnp.arange(M_CAP, dtype=gid.dtype)
+    oh = ((gid[:, None] == slot[None, :]) & (slot[None, :] < l0)
+          ).astype(jnp.float32)
+    src = jnp.einsum("lm,lfc->mfc", oh, base)
+    src_mask = (slot < jnp.minimum(l0, M_CAP)).astype(jnp.float32)
+
+    # center's local dataset, same exact one-hot reduction
+    coh = (gid == cg).astype(jnp.float32)
+    cx = jnp.einsum("l,lkf->kf", coh, x)
+    cy = jnp.einsum("l,lk->k", coh, y.astype(jnp.float32))
+    if shards > 1:
+        src = jax.lax.psum(src, FLEET_AXIS)
+        cx = jax.lax.psum(cx, FLEET_AXIS)
+        cy = jax.lax.psum(cy, FLEET_AXIS)
+
+    refined, _ = _greedytl(cx, cy.astype(jnp.int32), jnp.ones((K,)),
+                           src, src_mask, num_classes=num_classes)
+    w2 = jnp.where(has_g, (1.0 - eta) * w + eta * refined, refined)
+    cm = _window_cm(w2, x_test, y_oh, num_classes)
+    return w2, cm, cg
+
+
+def _draw_window(xtr, ytr, key, t, gid, validf, obs_per_dc: int):
+    """Device-side collection: per-DC fold_in keys (shard-count invariant),
+    ``obs_per_dc`` uniform draws from the train stream per DC."""
+    n_train = xtr.shape[0]
+    kt = jax.random.fold_in(key, t)
+    keys = jax.vmap(lambda g: jax.random.fold_in(kt, g))(gid)
+    idx = jax.vmap(
+        lambda k: jax.random.randint(k, (obs_per_dc,), 0, n_train))(keys)
+    x = xtr[idx]                                # (Lloc, K, F)
+    y = ytr[idx]
+    m = jnp.ones(idx.shape, jnp.float32) * validf[:, None]
+    return x, y, m
+
+
+@lru_cache(maxsize=None)
+def _city_program(W: int, L: int, K: int, shards: int, num_classes: int,
+                  iters: int):
+    """The whole city scenario as one jitted shard_map'd scan: collection,
+    training, election, refine, EMA and streamed eval never leave the
+    device; per-window buffers are scan-local, so peak memory is
+    independent of W."""
+    mesh = fleet_mesh(shards)
+    Lloc = L // shards
+
+    def mapped(xtr, ytr, x_test, y_oh, eta, l0, key):
+        shard = jax.lax.axis_index(FLEET_AXIS).astype(jnp.int32)
+        gid = shard * Lloc + jnp.arange(Lloc, dtype=jnp.int32)
+        valid = gid < l0
+        validf = valid.astype(jnp.float32)
+
+        def body(carry, t):
+            w, has_g = carry
+            x, y, m = _draw_window(xtr, ytr, key, t, gid, validf, K)
+            w2, cm, cg = _city_round(
+                w, has_g, x, y, m, valid, gid, l0, eta, x_test, y_oh,
+                num_classes=num_classes, iters=iters, shards=shards)
+            return (w2, has_g | True), (cm, cg)
+
+        F = xtr.shape[1]
+        carry0 = (jnp.zeros((F + 1, num_classes), jnp.float32),
+                  jnp.asarray(False))
+        _, (cms, centers) = jax.lax.scan(body, carry0,
+                                         jnp.arange(W, dtype=jnp.int32))
+        return cms, centers
+
+    fn = shard_map(mapped, mesh=mesh,
+                   in_specs=(P(), P(), P(), P(), P(), P(), P()),
+                   out_specs=(P(), P()), check_rep=False)
+    return jax.jit(fn)
+
+
+@count_dispatch("city_scan")
+def _dispatch_city(program, *args):
+    return program(*args)
+
+
+def _charge_city_collection(ledger: Ledger, fleet_size: int,
+                            obs_per_dc: int) -> None:
+    """One aggregate collection event per window: every DC collects
+    ``obs_per_dc`` observations over 802.15.4 (1 tx + 1 rx each), charged
+    as event counts so the total equals ``fleet_size`` separate
+    ``collect_to_mule`` events."""
+    ledger.add("802.15.4", obs_per_dc * OBS_BYTES, purpose="collection",
+               n_tx=fleet_size, n_rx=fleet_size, what="sensor->SM (city)")
+
+
+def _charge_city_learning(ledger: Ledger, tech: str, fleet_size: int,
+                          center_is_ap: bool) -> None:
+    """Analytic StarHTL learning charge for one window: the loop/fleet
+    engines iterate Topology patterns over L(L-1) ordered pairs; at city
+    scale we evaluate the transport's per-role-pair (tx, rx) counts on
+    three representative nodes and multiply by the pair multiplicities —
+    O(1) ledger events per window, totals equal to the pairwise sum."""
+    L = fleet_size
+    counts = get_transport(tech).counts
+    ap, m1, m2 = Node("AP", is_ap=True), Node("SM1"), Node("SM2")
+
+    def add(nbytes, what, pairs):
+        tx = rx = 0
+        for mult, src, dst in pairs:
+            a, b = counts(src, dst)
+            tx += mult * a
+            rx += mult * b
+        ledger.add(tech, nbytes, purpose="learning", n_tx=tx, n_rx=rx,
+                   what=what)
+
+    # entropy index exchange: every ordered pair
+    add(INDEX_BYTES, "entropy index",
+        [(L - 1, ap, m1), (L - 1, m1, ap), ((L - 1) * (L - 2), m1, m2)])
+    if center_is_ap:
+        add(INDEX_BYTES, "center id", [(L - 1, ap, m1)])
+        add(MODEL_BYTES, "m0 to center", [(L - 1, m1, ap)])
+    else:
+        add(INDEX_BYTES, "center id", [(1, m1, ap), (L - 2, m1, m2)])
+        add(MODEL_BYTES, "m0 to center", [(1, ap, m1), (L - 2, m2, m1)])
+
+
+def run_city(cfg, data: Dataset, *, max_shards: Optional[int] = None):
+    """The city scenario: ``cfg.fleet_size`` DCs, ``cfg.obs_per_dc``
+    observations each per window, StarHTL, one jitted dispatch for the
+    whole run. ``max_shards`` caps the DC-mesh width (default: every
+    visible device whose count divides the padded fleet)."""
+    from repro.core.scenario import ScenarioResult
+
+    L0, K, W = cfg.fleet_size, cfg.obs_per_dc, cfg.windows
+    L = city_fleet_pad(L0)
+    shards = dc_shards(L, max_shards)
+    xtr, ytr = _train_arrays(data)
+    x_test, y_oh = _eval_arrays(data)
+    program = _city_program(W, L, K, shards, NUM_CLASSES, cfg.train_iters)
+    cms, centers = _dispatch_city(
+        program, xtr, ytr, x_test, y_oh,
+        jnp.float32(cfg.global_update_rate), jnp.int32(L0),
+        jax.random.PRNGKey(cfg.seed))
+    cms, centers = np.asarray(cms), np.asarray(centers)
+
+    ledger = Ledger()
+    for t in range(W):
+        _charge_city_collection(ledger, L0, K)
+        _charge_city_learning(ledger, cfg.tech, L0,
+                              center_is_ap=(int(centers[t]) == 0))
+    return ScenarioResult(_f1_curve(cms, cfg.eval_every), ledger, cfg)
+
+
+# ---------------------------------------------------------------------------
+# per-window city reference: host-driven loop, one dispatch + one host sync
+# per window, host-side collection shipped to device every window — the
+# pre-scan execution pattern, kept as the benchmark comparator
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _city_round_program(num_classes: int, iters: int):
+    @jax.jit
+    def fn(w, has_g, x, y, m, valid, gid, l0, eta, x_test, y_oh):
+        return _city_round(w, has_g, x, y, m, valid, gid, l0, eta,
+                           x_test, y_oh, num_classes=num_classes,
+                           iters=iters, shards=1)
+    return fn
+
+
+def run_city_perwindow(cfg, data: Dataset):
+    """City scenario on the per-window pattern: every window the host draws
+    the fleet's observations, packs and uploads them, dispatches one round
+    and syncs the global model back — wall-clock scales with
+    ``windows x fleet data volume`` where :func:`run_city` pays one
+    dispatch total. Results match :func:`run_city` to float roundoff (the
+    rng streams differ by design: host numpy vs device fold_in)."""
+    from repro.core.scenario import ScenarioResult
+
+    L0, K, W = cfg.fleet_size, cfg.obs_per_dc, cfg.windows
+    L = city_fleet_pad(L0)
+    rng = np.random.default_rng(cfg.seed)
+    xtr_host = data.x_train.astype(np.float32)
+    ytr_host = data.y_train.astype(np.int32)
+    x_test, y_oh = _eval_arrays(data)
+    gid = jnp.arange(L, dtype=jnp.int32)
+    valid_host = np.arange(L) < L0
+    m_host = np.broadcast_to(valid_host[:, None], (L, K)
+                             ).astype(np.float32).copy()
+    program = _city_round_program(NUM_CLASSES, cfg.train_iters)
+
+    ledger = Ledger()
+    w = np.zeros((xtr_host.shape[1] + 1, NUM_CLASSES), np.float32)
+    has_g = False
+    cms = np.zeros((W, NUM_CLASSES, NUM_CLASSES), np.float32)
+    for t in range(W):
+        idx = rng.integers(0, len(ytr_host), size=(L, K))
+        xw = xtr_host[idx]                     # host gather, uploaded fresh
+        yw = ytr_host[idx]
+        w_dev, cm, cg = program(jnp.asarray(w), jnp.asarray(has_g),
+                                jnp.asarray(xw), jnp.asarray(yw),
+                                jnp.asarray(m_host), jnp.asarray(valid_host),
+                                gid, jnp.int32(L0),
+                                jnp.float32(cfg.global_update_rate),
+                                x_test, y_oh)
+        w = np.asarray(w_dev)                  # per-window host sync
+        has_g = True
+        cms[t] = np.asarray(cm)
+        _charge_city_collection(ledger, L0, K)
+        _charge_city_learning(ledger, cfg.tech, L0,
+                              center_is_ap=(int(cg) == 0))
+    return ScenarioResult(_f1_curve(cms, cfg.eval_every), ledger, cfg)

@@ -465,6 +465,24 @@ def _transport_grid(windows: int = 30, n_seeds: int = 1,
         label="{algo}_{tech}").with_seeds(n_seeds)
 
 
+@register_preset("city")
+def _city(fleet_size: int = 100_000, windows: int = 3, obs_per_dc: int = 4,
+          train_iters: int = 6, n_seeds: int = 1,
+          tech: str = "wifi") -> SweepSpec:
+    """The million-DC scaling scenario (ROADMAP north-star): a smart-city
+    StarHTL fleet of ``fleet_size`` Data Collectors on the scan engine —
+    device-resident fleet state, shard_map'd DC axis, one jitted dispatch
+    for the whole run (repro.core.cityscan.run_city). Defaults are sized
+    for the CI ``city-smoke`` gate: 10^5 DCs, 3 windows, trimmed base-SVM
+    iterations."""
+    base = ScenarioConfig(windows=windows, eval_every=1, algo="star",
+                          engine="scan", tech=tech, fleet_size=fleet_size,
+                          obs_per_dc=obs_per_dc, train_iters=train_iters)
+    return SweepSpec(
+        "city", base=base,
+        label=f"city_{fleet_size}dc_{tech}").with_seeds(n_seeds)
+
+
 @register_preset("smoke")
 def _smoke(windows: int = 6, n_seeds: int = 2,
            engine: str = "fleet") -> SweepSpec:

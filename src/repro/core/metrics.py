@@ -30,3 +30,44 @@ def f_measure(y_true: np.ndarray, y_pred: np.ndarray,
     if p + r == 0:
         return 0.0
     return 2.0 * p * r / (p + r)
+
+
+# ---------------------------------------------------------------------------
+# confusion-count forms — the streamed-eval path of the scan engine
+# (repro.core.cityscan) evaluates on device and brings back only an integer
+# confusion matrix per window; these helpers recover the EXACT paper metrics
+# from those counts. Bitwise equality with the label-array forms above holds
+# because every quantity is an integer/integer float64 division (exact for
+# counts < 2^53) followed by the same float ops in the same order
+# (tests/test_cityscan.py property-checks the equivalence).
+# ---------------------------------------------------------------------------
+
+def confusion_counts(y_true: np.ndarray, y_pred: np.ndarray,
+                     num_classes: int) -> np.ndarray:
+    """Confusion matrix ``cm[true, pred]`` as int64 counts."""
+    cm = np.zeros((num_classes, num_classes), np.int64)
+    np.add.at(cm, (np.asarray(y_true, np.int64), np.asarray(y_pred, np.int64)),
+              1)
+    return cm
+
+
+def precision_from_confusion(cm: np.ndarray) -> float:
+    return float(np.trace(cm) / cm.sum())
+
+
+def recall_from_confusion(cm: np.ndarray) -> float:
+    vals = []
+    for c in range(cm.shape[0]):
+        row = cm[c].sum()
+        if row == 0:
+            continue
+        vals.append(float(cm[c, c] / row))
+    return float(np.mean(vals)) if vals else 0.0
+
+
+def f_measure_from_confusion(cm: np.ndarray) -> float:
+    p = precision_from_confusion(cm)
+    r = recall_from_confusion(cm)
+    if p + r == 0:
+        return 0.0
+    return 2.0 * p * r / (p + r)

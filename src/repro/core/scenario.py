@@ -70,6 +70,12 @@ ENGINES = {
              "star": loop_engine.run_window_star},
 }
 
+# Whole-scenario engines dispatch above the per-window ENGINES table:
+# "scan" (repro.core.cityscan, imported lazily — it is heavier) rolls the
+# per-window loop into one jitted lax.scan; with ``fleet_size`` set it runs
+# the shard_map'd city engine instead of the collection stream.
+SCENARIO_ENGINES = ("scan",)
+
 
 def _host(doc: str = "") -> dict:
     """Field metadata marking a config field as *host-side*: it steers
@@ -110,6 +116,16 @@ class ScenarioConfig:
     # time slot" (paper Section 3): the window model updates the global model
     # incrementally. We use an exponential moving average with this rate.
     global_update_rate: float = field(default=0.3, metadata=_host())
+    # City mode (engine="scan" only): a fixed fleet of ``fleet_size`` DCs,
+    # each drawing ``obs_per_dc`` observations per window ON DEVICE — the
+    # 10^5-DC scaling axis (repro.core.cityscan.run_city). None = the
+    # paper's host-side collection stream.
+    fleet_size: Optional[int] = None
+    obs_per_dc: int = 4
+    # Base-SVM GD iterations, honored by the scan engine only (the
+    # loop/fleet engines pin the paper's 200 — parity oracle); the city
+    # preset trims it so 10^5-DC rounds fit the CI budget.
+    train_iters: int = 200
 
 
 @dataclass
@@ -305,12 +321,17 @@ _predict = jax.jit(svm_predict)
 
 
 class EvalCache:
-    """Keyed device-side test-set cache.
+    """Keyed device-side dataset-derivative cache.
 
-    One entry per :class:`Dataset` object (keyed by identity, the dataset
-    ref pinned so ids stay valid), LRU-bounded so interleaved sweeps over
-    several datasets — sequential, stacked, or alternating — all hit
-    without re-uploading the test matrix every window.
+    Entries are keyed by ``(dataset identity, kind)`` — the dataset ref is
+    pinned inside the entry so ids stay valid — and LRU-bounded, so
+    interleaved sweeps over several datasets (sequential, stacked,
+    alternating, or the scan engine's streamed eval, which derives several
+    device arrays per dataset) all hit without re-uploading per window.
+    Keying on the *kind* as well keeps the scan engine's extra derivatives
+    (one-hot test labels, device train stream) from evicting the fleet
+    engine's test matrix mid-sweep — cross-engine isolation is regression
+    tested (tests/test_cityscan.py).
 
     Mutation is locked: the ``devices`` sweep backend evaluates shards
     from several threads against this one cache, and its entries hold
@@ -318,24 +339,27 @@ class EvalCache:
     ``processes``-backend workers (each worker process builds its own;
     tests/test_parallel_sweep.py pins both properties)."""
 
-    def __init__(self, maxsize: int = 4):
+    def __init__(self, maxsize: int = 16):
         self.maxsize = maxsize
-        self._entries: "OrderedDict[int, tuple]" = OrderedDict()
+        self._entries: "OrderedDict[tuple, tuple]" = OrderedDict()
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
 
-    def test_array(self, data: Dataset) -> jnp.ndarray:
-        key = id(data)
+    def array(self, data: Dataset, kind: str,
+              build: Callable[[Dataset], jnp.ndarray]) -> jnp.ndarray:
+        """The device array ``build(data)``, cached under
+        ``(id(data), kind)``."""
+        key = (id(data), kind)
         with self._lock:
             hit = self._entries.get(key)
             if hit is not None and hit[0] is data:
                 self.hits += 1
                 self._entries.move_to_end(key)
                 return hit[1]
-        # upload outside the lock (device transfer can be slow); a racing
-        # miss on the same dataset costs one redundant upload, nothing else
-        arr = jnp.asarray(data.x_test.astype(np.float32))
+        # build outside the lock (device transfer can be slow); a racing
+        # miss on the same key costs one redundant upload, nothing else
+        arr = build(data)
         with self._lock:
             self.misses += 1
             self._entries[key] = (data, arr)
@@ -343,6 +367,10 @@ class EvalCache:
             while len(self._entries) > self.maxsize:
                 self._entries.popitem(last=False)
         return arr
+
+    def test_array(self, data: Dataset) -> jnp.ndarray:
+        return self.array(
+            data, "test", lambda d: jnp.asarray(d.x_test.astype(np.float32)))
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -410,9 +438,38 @@ def validate_config(cfg: ScenarioConfig) -> None:
     excluded from learning leaves every round with ``dcs == []``, so the
     global model would stay ``None`` forever and the first eval would
     crash deep in the engines."""
-    if cfg.engine not in ENGINES:
-        raise KeyError(f"unknown engine {cfg.engine!r}; "
-                       f"pick one of {sorted(ENGINES)}")
+    if cfg.engine not in ENGINES and cfg.engine not in SCENARIO_ENGINES:
+        raise KeyError(f"unknown engine {cfg.engine!r}; pick one of "
+                       f"{sorted(ENGINES) + sorted(SCENARIO_ENGINES)}")
+    if cfg.engine != "scan" and cfg.train_iters != 200:
+        raise ValueError(
+            f"train_iters={cfg.train_iters} is honored by the scan engine "
+            f"only; the loop/fleet engines pin the paper's 200 iterations "
+            f"(they are the parity oracle)")
+    if cfg.train_iters < 1:
+        raise ValueError(f"train_iters must be >= 1, got {cfg.train_iters}")
+    if cfg.fleet_size is not None:
+        if cfg.engine != "scan" or cfg.algo != "star":
+            raise ValueError(
+                "city mode (fleet_size set) needs engine='scan' and "
+                "algo='star' — the device-resident fleet round is StarHTL")
+        if cfg.fleet_size < 2:
+            raise ValueError(f"city fleets need >= 2 DCs, got "
+                             f"{cfg.fleet_size}")
+        if cfg.obs_per_dc < 1:
+            raise ValueError(f"obs_per_dc must be >= 1, got "
+                             f"{cfg.obs_per_dc}")
+        if (cfg.p_edge != 0.0 or cfg.aggregate or cfg.uniform
+                or cfg.n_subsample is not None
+                or cfg.collection != "poisson_zipf"):
+            raise ValueError(
+                "city mode draws observations on device per DC; the "
+                "host-side collection knobs (p_edge, aggregate, uniform, "
+                "n_subsample, collection policy) must stay at defaults")
+    if cfg.engine == "scan" and cfg.algo == "edge_only":
+        raise ValueError("the scan engine covers the HTL algorithms "
+                         "('a2a'/'star'); use engine='fleet' for "
+                         "algo='edge_only'")
     if cfg.algo != "edge_only":
         from repro.core.energy import resolve_tech
         from repro.core.topology import get_transport
@@ -432,6 +489,11 @@ def validate_config(cfg: ScenarioConfig) -> None:
 
 def run_scenario(cfg: ScenarioConfig, data: Dataset) -> ScenarioResult:
     validate_config(cfg)
+    if cfg.engine == "scan":
+        from repro.core import cityscan
+        if cfg.fleet_size is not None:
+            return cityscan.run_city(cfg, data)
+        return cityscan.run_scenario_scan(cfg, data)
     rng = np.random.default_rng(cfg.seed)
     ledger = Ledger()
     n_total = cfg.windows * cfg.obs_per_window

@@ -61,6 +61,45 @@ DEFAULT_RULES = {
 
 MULTIPOD_RULES = dict(DEFAULT_RULES, batch=("pod", "data"), dc="pod")
 
+# Million-DC fleet engine (repro.core.cityscan): the stacked Data-Collector
+# dim is a real mesh axis, not a vmap batch — fleet state lives sharded on
+# device across the whole scan-over-windows program.
+FLEET_RULES = dict(DEFAULT_RULES, dc="dc")
+
+FLEET_AXIS = "dc"
+
+
+def fleet_mesh(n_shards: Optional[int] = None) -> Mesh:
+    """1-D device mesh over the first ``n_shards`` devices, axis ``"dc"``.
+
+    The cityscan engine shard_maps its fleet round over this axis; with
+    ``n_shards=None`` every visible device joins (8 under CI's
+    ``--xla_force_host_platform_device_count=8``)."""
+    devs = jax.devices()
+    n = len(devs) if n_shards is None else int(n_shards)
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"fleet_mesh wants 1..{len(devs)} shards, got {n}")
+    return Mesh(np.asarray(devs[:n]), (FLEET_AXIS,))
+
+
+def dc_shards(n_padded: int, max_shards: Optional[int] = None) -> int:
+    """Largest usable shard count for a padded DC axis: the biggest device
+    count (capped by ``max_shards``) that divides ``n_padded`` evenly, so
+    shard_map never needs ragged shards. Padded fleet capacities are
+    multiples of 32 (:func:`repro.core.fleet.fleet_cap`), so any
+    power-of-two device count <= 32 divides them."""
+    n_dev = len(jax.devices())
+    n = n_dev if max_shards is None else min(int(max_shards), n_dev)
+    n = max(1, n)
+    while n > 1 and n_padded % n != 0:
+        n -= 1
+    return n
+
+
+def dc_pspec(ndim: int) -> P:
+    """PartitionSpec sharding the leading (DC) dim, rest replicated."""
+    return P(*((FLEET_AXIS,) + (None,) * (ndim - 1)))
+
 
 def _axis_size(mesh: Mesh, mesh_axes) -> int:
     if mesh_axes is None:

@@ -1,0 +1,210 @@
+"""Scan-over-windows engine (repro.core.cityscan): fleet-engine parity,
+city-mode smoke + determinism, shard-count invariance (subprocess, 8 fake
+devices), EvalCache keying isolation, and the exact equivalence of the
+confusion-count metric forms used by the streamed eval."""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # deterministic shim, tests/_hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core.metrics import (confusion_counts, f_measure,
+                                f_measure_from_confusion, precision,
+                                precision_from_confusion, recall,
+                                recall_from_confusion)
+from repro.core.scenario import (EvalCache, ScenarioConfig, run_scenario,
+                                 _eval_cache)
+from repro.data.synthetic_covtype import make_covtype_like
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+DATA = make_covtype_like(seed=0)
+W = 5
+
+
+# ---------------------------------------------------------------------------
+# scan engine == fleet engine (the PR-1 parity oracle): the ledger is
+# host-replayed so it must be *exactly* equal, and the streamed confusion
+# eval reproduces the fleet engine's F1 values exactly on these configs
+# ---------------------------------------------------------------------------
+
+PARITY_CFGS = [
+    ScenarioConfig(windows=W, eval_every=1, algo="a2a", tech="wifi", seed=1),
+    ScenarioConfig(windows=W, eval_every=1, algo="star", tech="wifi", seed=1),
+    ScenarioConfig(windows=W, eval_every=1, algo="star", tech="mesh:hops=2",
+                   seed=2, aggregate=True),
+    ScenarioConfig(windows=W, eval_every=2, algo="a2a", tech="4g", seed=3,
+                   n_subsample=5),
+]
+
+
+@pytest.mark.parametrize("cfg", PARITY_CFGS,
+                         ids=lambda c: f"{c.algo}_{c.tech}_s{c.seed}")
+def test_scan_matches_fleet_engine(cfg):
+    ref = run_scenario(dataclasses.replace(cfg, engine="fleet"), DATA)
+    got = run_scenario(dataclasses.replace(cfg, engine="scan"), DATA)
+    assert got.ledger.events == ref.ledger.events
+    assert got.f1_curve == ref.f1_curve
+
+
+# ---------------------------------------------------------------------------
+# city engine: smoke, determinism, O(1) ledger events per window
+# ---------------------------------------------------------------------------
+
+CITY = ScenarioConfig(windows=3, eval_every=1, algo="star", engine="scan",
+                      tech="wifi", fleet_size=40, obs_per_dc=4,
+                      train_iters=5)
+
+
+def test_city_engine_smoke():
+    r = run_scenario(CITY, DATA)
+    assert len(r.f1_curve) == CITY.windows
+    assert all(0.0 < v <= 1.0 for v in r.f1_curve)
+    assert r.f1_curve[-1] > 0.25          # it actually learns
+    # analytic energy: exactly 4 ledger events per window (collection +
+    # entropy index + center id + model gather), never O(L^2)
+    assert len(r.ledger.events) == 4 * CITY.windows
+    assert r.energy_collection > 0 and r.energy_learning > 0
+
+
+def test_city_engine_deterministic():
+    a = run_scenario(CITY, DATA)
+    b = run_scenario(CITY, DATA)
+    assert a.f1_curve == b.f1_curve
+    assert a.ledger.events == b.ledger.events
+
+
+def test_city_perwindow_reference_runs():
+    from repro.core.cityscan import run_city_perwindow
+    r = run_city_perwindow(CITY, DATA)
+    assert len(r.f1_curve) == CITY.windows
+    assert all(0.0 < v <= 1.0 for v in r.f1_curve)
+    assert len(r.ledger.events) == 4 * CITY.windows
+
+
+def test_city_mode_config_validation():
+    with pytest.raises(ValueError, match="engine='scan'"):
+        run_scenario(dataclasses.replace(CITY, engine="fleet",
+                                         train_iters=200), DATA)
+    with pytest.raises(ValueError, match="host-side collection"):
+        run_scenario(dataclasses.replace(CITY, p_edge=0.5), DATA)
+    with pytest.raises(ValueError, match=">= 2 DCs"):
+        run_scenario(dataclasses.replace(CITY, fleet_size=1), DATA)
+
+
+# ---------------------------------------------------------------------------
+# shard-count invariance: sharded fleet rounds must match unsharded bitwise
+# (one-hot psum + lexicographic election — DESIGN.md §10). The XLA fake-
+# device flag must precede jax init, so the sweep owns its own process.
+# ---------------------------------------------------------------------------
+
+_SHARD_SCRIPT = textwrap.dedent("""
+    import dataclasses
+    import jax
+    from repro.core.cityscan import run_city
+    from repro.core.scenario import ScenarioConfig
+    from repro.data.synthetic_covtype import make_covtype_like
+
+    assert len(jax.devices()) == 8, jax.devices()
+    data = make_covtype_like(seed=0)
+    base = ScenarioConfig(windows=3, eval_every=1, algo="star",
+                          engine="scan", tech="wifi", obs_per_dc=4,
+                          train_iters=5)
+    # padded caps 64 / 128 / 224: shard counts 2,4,8 all divide them
+    for fleet_size, seed in ((40, 0), (100, 1), (200, 2)):
+        cfg = dataclasses.replace(base, fleet_size=fleet_size, seed=seed)
+        ref = run_city(cfg, data, max_shards=1)
+        for shards in (2, 4, 8):
+            got = run_city(cfg, data, max_shards=shards)
+            assert got.f1_curve == ref.f1_curve, (fleet_size, shards)
+            assert got.ledger.events == ref.ledger.events, \\
+                (fleet_size, shards)
+    print("SHARD-INVARIANCE-OK")
+""")
+
+
+@pytest.mark.slow
+def test_city_sharded_bitwise_matches_unsharded_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    proc = subprocess.run([sys.executable, "-c", _SHARD_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=540)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    assert "SHARD-INVARIANCE-OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# EvalCache keying: (dataset, kind) entries must isolate — the scan
+# engine's extra derivatives may never evict or shadow the fleet engine's
+# test matrix, and re-running any engine must hit, not thrash
+# ---------------------------------------------------------------------------
+
+def test_evalcache_kind_keying_isolates_entries():
+    import jax.numpy as jnp
+    cache = EvalCache(maxsize=8)
+    d1 = make_covtype_like(seed=11)
+    d2 = make_covtype_like(seed=12)
+    built = {}
+    for i, data in enumerate((d1, d2)):
+        for j, kind in enumerate(("test", "test_onehot", "train_x",
+                                  "train_y")):
+            built[(i, kind)] = cache.array(
+                data, kind, lambda d, v=(i * 10 + j): jnp.full((3,), v))
+    assert cache.misses == 8 and cache.hits == 0
+    # second pass: every (dataset, kind) hits and returns the same buffer
+    for i, data in enumerate((d1, d2)):
+        for kind in ("test", "test_onehot", "train_x", "train_y"):
+            again = cache.array(data, kind,
+                                lambda d: pytest.fail("rebuilt on hit"))
+            assert again is built[(i, kind)]
+    assert cache.misses == 8 and cache.hits == 8
+
+
+def test_evalcache_lru_bound_still_applies():
+    import jax.numpy as jnp
+    cache = EvalCache(maxsize=2)
+    d = make_covtype_like(seed=13)
+    for kind in ("a", "b", "c"):
+        cache.array(d, kind, lambda _: jnp.zeros(1))
+    assert len(cache) == 2                 # oldest kind evicted
+    cache.array(d, "a", lambda _: jnp.zeros(1))
+    assert cache.misses == 4               # 'a' was the evicted one
+
+
+def test_scan_engine_reuses_fleet_test_matrix():
+    """Cross-engine no-thrash regression: after a fleet run uploaded the
+    test matrix, a scan run on the same dataset must only miss on its NEW
+    kinds (the one-hot labels), hitting the shared 'test' entry."""
+    data = make_covtype_like(seed=14)
+    cfg = ScenarioConfig(windows=2, eval_every=1, algo="star", tech="wifi")
+    run_scenario(cfg, data)                              # uploads 'test'
+    h0, m0 = _eval_cache.hits, _eval_cache.misses
+    run_scenario(dataclasses.replace(cfg, engine="scan"), data)
+    assert _eval_cache.misses - m0 == 1                  # 'test_onehot' only
+    assert _eval_cache.hits - h0 >= 1                    # 'test' reused
+
+
+# ---------------------------------------------------------------------------
+# streamed-eval metric forms: confusion-count forms are bitwise equal to
+# the paper's label-array forms (integer/integer f64 divisions are exact)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(pairs=st.lists(st.tuples(st.integers(min_value=0, max_value=6),
+                                st.integers(min_value=0, max_value=6)),
+                      min_size=1, max_size=200))
+def test_confusion_forms_match_label_forms_bitwise(pairs):
+    y_true = np.array([a for a, _ in pairs], np.int64)
+    y_pred = np.array([b for _, b in pairs], np.int64)
+    cm = confusion_counts(y_true, y_pred, 7)
+    assert cm.sum() == len(pairs)
+    assert precision_from_confusion(cm) == precision(y_true, y_pred)
+    assert recall_from_confusion(cm) == recall(y_true, y_pred, 7)
+    assert f_measure_from_confusion(cm) == f_measure(y_true, y_pred, 7)

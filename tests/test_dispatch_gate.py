@@ -71,3 +71,49 @@ def test_loop_engine_still_counts_per_dc():
     c = _counts([cfg], stack=False)
     assert c.get("train_svm", 0) > WINDOWS      # one per DC, Poisson(7)
     assert c.get("greedytl", 0) > WINDOWS
+
+
+# ---------------------------------------------------------------------------
+# scan engine: per-WINDOW dispatch is banned outright — a scenario is O(1)
+# jitted dispatches no matter how many windows it runs (the whole run is one
+# lax.scan program; repro.core.cityscan)
+# ---------------------------------------------------------------------------
+
+PER_WINDOW_NAMES = ("train_svm", "greedytl", "train_svm_fleet",
+                    "greedytl_fleet", "greedytl_fleet_stacked")
+
+
+def _scan_counts(cfg):
+    reset_dispatch_counts()
+    run_scenario(cfg, DATA)
+    return dispatch_counts()
+
+
+@pytest.mark.parametrize("algo", ["a2a", "star"])
+def test_scan_engine_O1_dispatches_regardless_of_windows(algo):
+    counts = {}
+    for w in (3, 9):
+        cfg = ScenarioConfig(windows=w, eval_every=w, algo=algo,
+                             engine="scan")
+        c = _scan_counts(cfg)
+        # never a per-window or per-DC entry point
+        for name in PER_WINDOW_NAMES:
+            assert c.get(name, 0) == 0, c
+        assert c.get("scan_windows", 0) == 1, c
+        counts[w] = c
+    # tripling the window count must not change the dispatch profile
+    assert counts[3] == counts[9], counts
+
+
+def test_city_engine_O1_dispatches_regardless_of_windows():
+    counts = {}
+    for w in (2, 5):
+        cfg = ScenarioConfig(windows=w, eval_every=w, algo="star",
+                             engine="scan", fleet_size=64, obs_per_dc=4,
+                             train_iters=5)
+        c = _scan_counts(cfg)
+        for name in PER_WINDOW_NAMES:
+            assert c.get(name, 0) == 0, c
+        assert c.get("city_scan", 0) == 1, c
+        counts[w] = c
+    assert counts[2] == counts[5], counts

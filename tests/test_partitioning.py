@@ -1,0 +1,123 @@
+"""DC-axis sharding helpers (repro.sharding.partitioning): fleet mesh
+construction, shard-count selection, and the FLEET_RULES PartitionSpecs the
+cityscan engine shard_maps over. The bitwise sharded-vs-unsharded fleet
+round check itself lives in tests/test_cityscan.py (it needs 8 fake
+devices, hence its own subprocess)."""
+import jax
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # deterministic shim, tests/_hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.core.fleet import fleet_cap
+from repro.sharding.partitioning import (DEFAULT_RULES, FLEET_AXIS,
+                                         FLEET_RULES, dc_pspec, dc_shards,
+                                         fleet_mesh, logical_to_pspec)
+
+
+class FakeMesh:
+    """Stand-in with just .shape (logical_to_pspec only uses that)."""
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+
+
+# ---------------------------------------------------------------------------
+# mesh construction
+# ---------------------------------------------------------------------------
+
+def test_fleet_mesh_default_uses_every_device():
+    mesh = fleet_mesh()
+    assert mesh.axis_names == (FLEET_AXIS,)
+    assert mesh.shape[FLEET_AXIS] == len(jax.devices())
+
+
+def test_fleet_mesh_explicit_width():
+    mesh = fleet_mesh(1)
+    assert mesh.shape[FLEET_AXIS] == 1
+    assert mesh.devices.flatten()[0] == jax.devices()[0]
+
+
+def test_fleet_mesh_rejects_bad_widths():
+    with pytest.raises(ValueError):
+        fleet_mesh(0)
+    with pytest.raises(ValueError):
+        fleet_mesh(len(jax.devices()) + 1)
+
+
+# ---------------------------------------------------------------------------
+# shard-count selection
+# ---------------------------------------------------------------------------
+
+def test_dc_shards_single_device_host():
+    # this process sees one real CPU device
+    assert dc_shards(128) == min(len(jax.devices()), 128)
+
+
+def test_dc_shards_respects_max_shards_cap():
+    assert dc_shards(128, max_shards=1) == 1
+
+
+def test_dc_shards_picks_largest_divisor(monkeypatch):
+    monkeypatch.setattr(jax, "devices", lambda: [object()] * 6)
+    assert dc_shards(64) == 4         # 6 and 5 don't divide 64; 4 does
+    assert dc_shards(96) == 6
+    assert dc_shards(7) == 1          # prime below every usable width
+    assert dc_shards(35, max_shards=4) == 1   # no width in 2..4 divides 35
+
+
+@settings(max_examples=60, deadline=None)
+@given(n_dc=st.integers(min_value=1, max_value=200_000),
+       n_dev=st.integers(min_value=1, max_value=16))
+def test_dc_shards_always_divides_padded_caps(n_dc, n_dev):
+    """The contract the city engine relies on: for any Poisson fleet size,
+    the padded capacity (multiples of 32 past the small buckets) is evenly
+    divided by the chosen shard count — shard_map never sees ragged
+    shards."""
+    import repro.sharding.partitioning as part
+    real = jax.devices
+    jax.devices = lambda: [object()] * n_dev
+    try:
+        padded = fleet_cap(n_dc)
+        s = part.dc_shards(padded)
+        assert 1 <= s <= n_dev
+        assert padded % s == 0
+        # maximality: no larger usable device count divides evenly
+        assert all(padded % k != 0 for k in range(s + 1, n_dev + 1))
+    finally:
+        jax.devices = real
+
+
+# ---------------------------------------------------------------------------
+# DC-axis PartitionSpecs
+# ---------------------------------------------------------------------------
+
+def test_fleet_rules_only_override_dc():
+    assert FLEET_RULES["dc"] == FLEET_AXIS
+    assert DEFAULT_RULES["dc"] is None
+    assert {k: v for k, v in FLEET_RULES.items() if k != "dc"} == \
+        {k: v for k, v in DEFAULT_RULES.items() if k != "dc"}
+
+
+def test_dc_pspec_shards_leading_dim_only():
+    assert dc_pspec(1) == P(FLEET_AXIS)
+    assert dc_pspec(3) == P(FLEET_AXIS, None, None)
+
+
+def test_logical_to_pspec_fleet_rules_divisible():
+    mesh = FakeMesh(dc=8)
+    spec = logical_to_pspec(("dc", None), (128, 55), mesh, FLEET_RULES)
+    assert spec == P("dc")            # trailing None trimmed
+
+
+def test_logical_to_pspec_fleet_rules_non_divisible_replicates():
+    mesh = FakeMesh(dc=8)
+    spec = logical_to_pspec(("dc", None), (130, 55), mesh, FLEET_RULES)
+    assert spec == P()
+
+
+def test_default_rules_keep_dc_replicated():
+    mesh = FakeMesh(data=4, model=2, dc=8)
+    spec = logical_to_pspec(("dc", "embed"), (128, 64), mesh, DEFAULT_RULES)
+    assert spec == P(None, "data")
