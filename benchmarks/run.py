@@ -111,6 +111,187 @@ def bench_greedytl(quick: bool):
     return rows
 
 
+def _deep_greedy_problem(cap=160, n_src=12, seed=0):
+    """Deep-accepting GreedyTL problem at the production shape: n_src
+    sources each explain a disjoint feature block of the true boundary, so
+    greedy selection keeps accepting (depth == n_src at k_max=16)."""
+    import jax.numpy as jnp
+    F, C, M = 54, 7, 16
+    r = np.random.default_rng(seed)
+    src = np.zeros((M, F + 1, C), np.float32)
+    sm = np.zeros(M, np.float32)
+    w_total = np.zeros((F + 1, C), np.float32)
+    for i, blk in enumerate(np.array_split(np.arange(F), n_src)):
+        w = np.zeros((F + 1, C), np.float32)
+        w[blk] = r.normal(0, 1.0, (len(blk), C))
+        src[i] = w
+        sm[i] = 1.0
+        w_total += w
+    x = r.normal(size=(cap, F)).astype(np.float32)
+    y = np.argmax(x @ w_total[:-1] + w_total[-1], axis=1).astype(np.int32)
+    return tuple(jnp.asarray(v) for v in
+                 (x, y, np.ones(cap, np.float32), src, sm))
+
+
+def bench_greedytl_incremental(quick: bool):
+    """Incremental Cholesky carry vs the refactorize-per-step PR-2 path
+    (``incremental=False``): warm wall-clock at greedy depths 4/8/16 on a
+    deep-accepting production-shape problem (cap=160 -> R=1120, D=23,
+    M=16), per-refine jitted dispatch counts, and the ``loo_trials``
+    autotuner table. Updates results/benchmarks/greedytl_incremental.json
+    and the repo-level BENCH_greedytl.json trajectory (quick runs refresh
+    the refine/dispatch numbers; the paper_tables cold/warm subprocess
+    timings only re-measure on a full run)."""
+    import jax
+    import jax.numpy as jnp
+    from benchmarks.paper_tables import RESULTS_DIR
+    from repro.core.dispatch import dispatch_scope
+    from repro.core.greedytl import (greedytl, greedytl_fleet,
+                                     greedytl_fleet_stacked)
+    from repro.kernels import ops as kernel_ops
+
+    C, M, cap = 7, 16, 160
+    x, y, m, src, sm = _deep_greedy_problem(cap=cap)
+    n = 10 if quick else 30
+    rows, refine = [], {}
+    for k_max in (4, 8, 16):
+        per, depth = {}, 0
+        for label, inc in (("incremental", True), ("refactor", False)):
+            f = lambda: greedytl(x, y, m, src, sm, num_classes=C,
+                                 k_max=k_max, incremental=inc)
+            w_, sel = f()
+            jax.block_until_ready(w_)
+            depth = int(np.asarray(sel).sum())
+            t0 = time.time()
+            for _ in range(n):
+                jax.block_until_ready(f()[0])
+            per[label] = (time.time() - t0) / n * 1e6
+        speedup = per["refactor"] / per["incremental"]
+        refine[f"k_max_{k_max}"] = {
+            "incremental_us": round(per["incremental"]),
+            "refactor_us": round(per["refactor"]),
+            "depth": depth, "speedup": round(speedup, 2)}
+        rows.append((f"greedytl_inc_k{k_max}", per["incremental"],
+                     f"depth={depth} speedup={speedup:.2f}x vs refactor"))
+
+    # accepting k candidates must still be ONE dispatch per entry point
+    with dispatch_scope() as d1:
+        jax.block_until_ready(greedytl(x, y, m, src, sm, num_classes=C)[0])
+    L = 2
+    xf, yf, mf = (jnp.stack([v] * L) for v in (x, y, m))
+    with dispatch_scope() as d2:
+        jax.block_until_ready(
+            greedytl_fleet(xf, yf, mf, src, sm, num_classes=C)[0])
+    srcs, sms = (jnp.stack([v] * L) for v in (src, sm))
+    with dispatch_scope() as d3:
+        jax.block_until_ready(greedytl_fleet_stacked(
+            xf, yf, mf, srcs, sms, num_classes=C)[0])
+    dispatches = {**d1, **d2, **d3}
+
+    # persist the kernel-selection table for the production trial shape
+    entry = kernel_ops.autotune_loo_trials(cap * C, M + C, M, persist=True)
+    rows.append(("loo_trials_autotune",
+                 min(entry["timings_us"].values()),
+                 f"{kernel_ops.autotune_key(cap * C, M + C, M)} -> "
+                 f"{entry['impl']}"))
+
+    tables = None
+    if not quick:
+        import subprocess
+        import tempfile
+        code = ("import time; t0 = time.time(); "
+                "from benchmarks.paper_tables import run_all; "
+                "run_all(quick=True); print('WALL_S', time.time() - t0)")
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        tables_json = os.path.join(RESULTS_DIR, "paper_tables.json")
+        keep = open(tables_json).read() if os.path.exists(tables_json) \
+            else None
+
+        def run_once(cache_dir):
+            env = dict(os.environ,
+                       PYTHONPATH="src" + os.pathsep
+                       + os.environ.get("PYTHONPATH", ""),
+                       JAX_COMPILATION_CACHE_DIR=cache_dir)
+            out = subprocess.run([sys.executable, "-c", code], cwd=root,
+                                 env=env, capture_output=True, text=True,
+                                 check=True)
+            return float(out.stdout.strip().split()[-1])
+
+        try:
+            with tempfile.TemporaryDirectory() as cd:
+                cold = run_once(cd)
+                warm = run_once(cd)
+        finally:
+            if keep is not None:        # quick subprocess must not clobber
+                with open(tables_json, "w") as f:
+                    f.write(keep)
+        tables = {"cold_s": round(cold, 1), "warm_jit_cache_s":
+                  round(warm, 1)}
+        rows.append(("paper_tables_quick_cold", cold * 1e6,
+                     "subprocess, fresh jit cache"))
+        rows.append(("paper_tables_quick_warm", warm * 1e6,
+                     "subprocess, persistent jit cache"))
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "greedytl_incremental.json")
+    payload = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            payload = json.load(f)
+    payload["description"] = (
+        "Before/after record for the incremental-factor GreedyTL PR: the "
+        "greedy while_loop carries the active-set Cholesky factor across "
+        "accepted steps (border update) instead of refactorizing; "
+        "'refactor' is the in-tree incremental=False oracle (the PR-2 "
+        "path). Deep-accepting problem, cap=160, M=16, warm jit, CI-class "
+        "container.")
+    payload["refine_us_per_call"] = refine
+    payload["dispatches_per_deep_refine"] = dispatches
+    payload["autotune"] = {"backend": jax.default_backend(),
+                           "key": kernel_ops.autotune_key(cap * C, M + C,
+                                                          M),
+                           "entry": entry}
+    if tables is not None:
+        payload["paper_tables_quick_wall_s"] = tables
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+
+    # repo-level trajectory (pr1/pr2 history seeded from
+    # results/benchmarks/greedytl_factorized.json)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    bench_path = os.path.join(root, "BENCH_greedytl.json")
+    traj = {"description": (
+        "paper_tables --quick wall-clock and deep-refine latency across "
+        "PRs; updated by benchmarks/run.py bench_greedytl_incremental "
+        "(bench-smoke CI refreshes the refine numbers; table timings come "
+        "from full local runs)."), "trajectory": []}
+    if os.path.exists(bench_path):
+        with open(bench_path) as f:
+            traj = json.load(f)
+    deep = refine["k_max_16"]
+    entry_row = {"label": "pr7_incremental_carry",
+                 "deep_refine_us": deep["incremental_us"],
+                 "deep_refine_speedup_vs_refactor": deep["speedup"],
+                 "deep_refine_depth": deep["depth"]}
+    if tables is not None:
+        entry_row["paper_tables_quick_cold_s"] = tables["cold_s"]
+        entry_row["paper_tables_quick_warm_s"] = tables["warm_jit_cache_s"]
+    else:
+        prev = {r["label"]: r for r in traj["trajectory"]}
+        old = prev.get("pr7_incremental_carry", {})
+        for k in ("paper_tables_quick_cold_s", "paper_tables_quick_warm_s"):
+            if k in old:
+                entry_row[k] = old[k]
+    traj["trajectory"] = [r for r in traj["trajectory"]
+                          if r["label"] != entry_row["label"]]
+    traj["trajectory"].append(entry_row)
+    with open(bench_path, "w") as f:
+        json.dump(traj, f, indent=1)
+        f.write("\n")
+    return rows
+
+
 def bench_fleet_engine(quick: bool):
     """Fleet vs loop engine: warm per-scenario wall-clock and per-window
     jitted dispatch counts (the fleet engine is O(1) per window)."""
@@ -563,6 +744,7 @@ def main():
     print("name,us_per_call,derived")
     sections = [bench_sweep_api, bench_parallel_sweep,
                 bench_hosts_launcher, bench_greedytl,
+                bench_greedytl_incremental,
                 bench_fleet_engine, bench_stacked_sweep,
                 bench_fleet_scaling, bench_kernels,
                 bench_htl_trainer, bench_dryrun_summary]

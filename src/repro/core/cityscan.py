@@ -36,6 +36,12 @@ combinatorial multiplicities — O(1) ledger events per window instead of
 the loop/fleet engines' O(L^2). Memory is flat in both window count (scan
 reuses one window's buffers) and — per DC — fleet size.
 
+Both engines inline ``_greedytl`` into their jitted scan bodies, so the
+greedy refine they compile is the incremental factor carry of DESIGN.md
+§11 (fixed-shape padded ``Ut``/``Cc``/``z`` through the inner
+``while_loop``; the carry is what keeps the whole-scenario program a
+single compilation unit at any greedy depth).
+
 The DC axis is bucket-padded with the PR-1/2 machinery
 (:func:`repro.core.fleet.fleet_cap`, multiples of 32) so Poisson fleet
 sizes never recompile, and shard counts divide every padded capacity.

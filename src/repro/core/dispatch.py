@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import threading
 from collections import Counter
+from contextlib import contextmanager
 from functools import wraps
 from typing import Mapping
 
@@ -50,6 +51,25 @@ def dispatch_counts() -> dict:
     """Snapshot of {entry-point name: call count} since the last reset."""
     with _LOCK:
         return dict(_COUNTS)
+
+
+@contextmanager
+def dispatch_scope():
+    """Yield a dict that, on exit, holds the dispatch-count DELTA of the
+    enclosed block (names with zero delta are omitted). Reads snapshots
+    instead of resetting the global counter, so scopes nest and compose
+    with the CI gate's own reset/inspect cycle. The gate uses this to pin
+    exact per-call dispatch profiles — e.g. that a deep greedy refine is
+    ONE jitted dispatch no matter how many candidates it accepts."""
+    before = dispatch_counts()
+    delta: dict = {}
+    try:
+        yield delta
+    finally:
+        for name, count in dispatch_counts().items():
+            d = count - before.get(name, 0)
+            if d:
+                delta[name] = d
 
 
 def merge_dispatch_counts(counts: Mapping[str, int]) -> None:

@@ -96,7 +96,9 @@ def refine_bucketed(dcs: Sequence[DC], srcs: Sequence[np.ndarray],
     """GreedyTL for an arbitrary DC list, each against ITS OWN source pool,
     in O(1) dispatches (one ``greedytl_fleet_stacked`` per sample bucket).
     Padding DCs carry all-zero masks and leave the greedy loop after one
-    step, so they are nearly free. Returns one (F+1, C) per DC."""
+    step, so they are nearly free. Returns one (F+1, C) per DC. The greedy
+    loop inside runs the incremental factor carry (DESIGN.md §11) by
+    default — accepting k sources never adds dispatches or recompiles."""
     out: List[Optional[np.ndarray]] = [None] * len(dcs)
     for b, idxs in sorted(_sample_groups(dcs, cap).items()):
         sel = [dcs[i] for i in idxs]

@@ -34,9 +34,21 @@ the *current* active set across all M candidates via the bordering identity
 (Schur complement of the added row/column), which drops per-candidate cost
 from O(D³) to O(D²) and collapses the whole trial sweep into one fused
 kernel launch (``repro.kernels.loo_trials``; pure-jnp fallback on CPU).
-The factor is rebuilt only when a candidate is accepted — which is exactly
-once per surviving while_loop step, since the loop exits on the first
-non-accepting step.
+
+**Incremental factor carry (DESIGN.md §11).** The greedy loop never
+refactorizes at all: the factor of the active set is carried ACROSS
+accepted steps in acceptance-permuted order. Accepting candidate j extends
+the carried factor by the bordering column already computed during trial
+scoring — c_j = L⁻¹g_j (a column of the carried ``Cc``), Schur pivot d_j —
+so the whitened rows ``Ut``, the whitened RHS ``z``, the candidate
+borderings ``Cc``, and the base fit/leverage all grow by one O(R) /
+O(M) append instead of an O(D³) refactorization plus O(R·D²) re-solve.
+All carries are fixed-shape (padded to C + min(k_max, M) active slots), so
+``lax.scan``/``shard_map`` engines compile the loop once. The final
+coefficients still come from one full masked factorization of the selected
+set (one per call, as before), so downstream numerics are unchanged by the
+carry. ``incremental=False`` keeps the PR-2 refactorize-per-step loop as
+the in-tree oracle for property tests and the before/after benchmark.
 """
 from __future__ import annotations
 
@@ -124,9 +136,119 @@ def _score_trials(AtA, Aty, A_rm, y, rmask, cmask, lam_d, M):
                                  y, rmask, zj, dinv)
 
 
+def _greedy_select_refactor(AtA, Aty, A_rm, yr, rmask, src_mask, lam_d, *,
+                            M: int, C: int, k_max: int):
+    """PR-2 greedy source selection: full masked refactorization per step
+    (``_score_trials`` re-factors the active system on every accepted
+    candidate). Kept verbatim as the in-tree oracle for the incremental
+    carry (property tests + before/after benchmark). Returns (sel, best)."""
+    bias_cols = jnp.concatenate([jnp.zeros(M), jnp.ones(C)])
+
+    def cond(state):
+        k, sel, best, done = state
+        return (~done) & (k < min(k_max, M))
+
+    def body(state):
+        k, sel, best, done = state
+        cm = jnp.concatenate([sel * src_mask, jnp.ones(C)])
+        objs = _score_trials(AtA, Aty, A_rm, yr, rmask, cm, lam_d, M)
+        objs = jnp.where((sel > 0) | (src_mask == 0), jnp.inf, objs)
+        j = jnp.argmin(objs)
+        improved = (objs[j] < best) & ~done
+        sel = jnp.where(improved, jnp.where(jnp.arange(M) == j, 1.0, sel),
+                        sel)
+        return (k + 1, sel, jnp.where(improved, objs[j], best),
+                done | ~improved)
+
+    obj0, _ = _loo_ridge_chol(AtA, Aty, A_rm, yr, rmask, bias_cols, lam_d)
+    _, sel, best, _ = jax.lax.while_loop(
+        cond, body, (0, jnp.zeros(M), obj0, jnp.asarray(False)))
+    return sel, best
+
+
+def _greedy_select_incremental(AtA, Aty, A_rm, yr, rmask, src_mask, lam_d, *,
+                               M: int, C: int, k_max: int):
+    """Greedy source selection with the factorization CARRIED across steps.
+
+    The active set's Cholesky factor is maintained in acceptance-permuted
+    order (bias columns in slots 0..C-1, then accepted sources in the order
+    they were accepted) inside fixed-shape padded carries:
+
+        Ut     (R, Dk)  whitened rows  (L⁻¹ A_activeᵀ)ᵀ, zero-padded cols
+        Cc     (Dk, M)  candidate borderings L⁻¹ G[active, :M], zero rows
+        z      (Dk,)    whitened RHS L⁻¹ (Aᵀy)_active
+        fitted (R,)     active-set fit   Ut z
+        h      (R,)     active-set leverage ‖u_i‖²
+
+    with Dk = C + min(k_max, M). Per step, the Schur pivots d_j and
+    bordered RHS z_j come straight from the carries (no factorization), the
+    M-candidate sweep runs as one ``loo_trials`` kernel launch, and
+    accepting j appends the bordering column t_j = (A_:j − Ut c_j)/d_j to
+    ``Ut``, the row (G_j: − c_jᵀCc)/d_j to ``Cc``, and z_j to ``z`` — the
+    exact forward-substitution rows a from-scratch factor of the grown set
+    would produce (DESIGN.md §11). No downdates are ever needed: the loop
+    only accepts (it exits on the first non-improving step), so the active
+    set grows monotonically. Returns (sel, best)."""
+    R = A_rm.shape[0]
+    Kmax = min(k_max, M)
+    Dk = C + Kmax
+
+    # bias-only seed factor (the initial active set), permuted to the front
+    Lb = jnp.linalg.cholesky(AtA[M:, M:] + jnp.diag(lam_d[M:]))
+    Utb = solve_triangular(Lb, A_rm[:, M:].T, lower=True).T      # (R, C)
+    zb = solve_triangular(Lb, Aty[M:], lower=True)               # (C,)
+    Ccb = solve_triangular(Lb, AtA[M:, :M], lower=True)          # (C, M)
+
+    Ut0 = jnp.zeros((R, Dk)).at[:, :C].set(Utb)
+    Cc0 = jnp.zeros((Dk, M)).at[:C].set(Ccb)
+    z0 = jnp.zeros((Dk,)).at[:C].set(zb)
+    fitted0 = Utb @ zb
+    h0 = jnp.sum(Utb ** 2, axis=-1)
+    resid0 = (fitted0 - yr) * rmask
+    obj0 = jnp.sum((resid0 / jnp.maximum(1.0 - h0, 0.1)) ** 2)
+    diagG = jnp.diagonal(AtA)[:M] + lam_d[:M]
+
+    def cond(state):
+        k, sel, best, done = state[:4]
+        return (~done) & (k < Kmax)
+
+    def body(state):
+        k, sel, best, done, Ut, Cc, z, fitted, h = state
+        active = sel * src_mask
+        dsq = diagG - jnp.sum(Cc ** 2, axis=0)
+        dinv = jax.lax.rsqrt(jnp.maximum(dsq, 1e-8)) * (1.0 - active)
+        zj = (Aty[:M] - Cc.T @ z) * dinv
+        objs = kernel_ops.loo_trials(Ut, Cc, A_rm[:, :M], fitted, h, yr,
+                                     rmask, zj, dinv)
+        objs = jnp.where((sel > 0) | (src_mask == 0), jnp.inf, objs)
+        j = jnp.argmin(objs)
+        improved = (objs[j] < best) & ~done
+        # border append at the next free slot (every prior step accepted,
+        # or the loop would already have exited)
+        slot = C + k
+        tcol = (A_rm[:, j] - Ut @ Cc[:, j]) * dinv[j]            # (R,)
+        ccrow = (AtA[j, :M] - Cc.T @ Cc[:, j]) * dinv[j]         # (M,)
+        pick = lambda new, old: jnp.where(improved, new, old)
+        return (k + 1,
+                pick(sel.at[j].set(1.0), sel),
+                pick(objs[j], best),
+                done | ~improved,
+                pick(Ut.at[:, slot].set(tcol), Ut),
+                pick(Cc.at[slot].set(ccrow), Cc),
+                pick(z.at[slot].set(zj[j]), z),
+                pick(fitted + tcol * zj[j], fitted),
+                pick(h + tcol * tcol, h))
+
+    state0 = (0, jnp.zeros(M), obj0, jnp.asarray(False),
+              Ut0, Cc0, z0, fitted0, h0)
+    out = jax.lax.while_loop(cond, body, state0)
+    return out[1], out[2]
+
+
 def _greedytl(x, y, mask, src_w, src_mask, *, num_classes: int,
               lam_src: float = 0.1, lam_x: float = 10.0,
-              lam_bias: float = 2.0, k_max: int = 16):
+              lam_bias: float = 2.0, k_max: int = 16,
+              incremental: bool = True):
     """Unjitted GreedyTL core — also the map target of the fleet refiner."""
     n, F = x.shape
     M, _, C = src_w.shape
@@ -146,7 +268,6 @@ def _greedytl(x, y, mask, src_w, src_mask, *, num_classes: int,
     A = jnp.concatenate([A_src, A_bias], axis=1)         # (R, M+C)
     yr = Yoh.reshape(R)
     rmask = jnp.repeat(mask, C)
-    bias_cols = jnp.concatenate([jnp.zeros(M), jnp.ones(C)])
     lam_vec = jnp.concatenate([jnp.full((M,), lam_src),
                                jnp.full((C,), lam_bias)])
 
@@ -156,34 +277,20 @@ def _greedytl(x, y, mask, src_w, src_mask, *, num_classes: int,
     Aty = A_rm.T @ (yr * rmask)
     lam_d = jnp.broadcast_to(lam_vec, (A.shape[1],)) + 1e-4
 
-    def _loo(cm):
-        return _loo_ridge_chol(AtA, Aty, A_rm, yr, rmask, cm, lam_d)
-
-    def cond(state):
-        k, sel, best, done = state
-        return (~done) & (k < min(k_max, M))
-
-    def body(state):
-        k, sel, best, done = state
-        cm = jnp.concatenate([sel * src_mask, jnp.ones(C)])
-        objs = _score_trials(AtA, Aty, A_rm, yr, rmask, cm, lam_d, M)
-        objs = jnp.where((sel > 0) | (src_mask == 0), jnp.inf, objs)
-        j = jnp.argmin(objs)
-        improved = (objs[j] < best) & ~done
-        sel = jnp.where(improved, jnp.where(jnp.arange(M) == j, 1.0, sel),
-                        sel)
-        return (k + 1, sel, jnp.where(improved, objs[j], best),
-                done | ~improved)
-
-    obj0, _ = _loo(bias_cols)
     # Early-exit greedy selection: once no trial improves, further steps are
     # provable no-ops, so a while_loop saves the (typically ~4x) dead steps
-    # a fixed-length scan would still execute.
-    _, sel, _, _ = jax.lax.while_loop(
-        cond, body, (0, jnp.zeros(M), obj0, jnp.asarray(False)))
+    # a fixed-length scan would still execute. The incremental path carries
+    # the active-set factor across accepted steps; the refactorizing path is
+    # the PR-2 oracle.
+    select = (_greedy_select_incremental if incremental
+              else _greedy_select_refactor)
+    sel, _ = select(AtA, Aty, A_rm, yr, rmask, src_mask, lam_d,
+                    M=M, C=C, k_max=k_max)
 
     cm = jnp.concatenate([sel * src_mask, jnp.ones(C)])
-    _, v1 = _loo(cm)
+    # one full factorization of the SELECTED set per call (not per step)
+    # keeps the final coefficients on the exact PR-2 numerical path
+    _, v1 = _loo_ridge_chol(AtA, Aty, A_rm, yr, rmask, cm, lam_d)
     alpha = v1[:M] / s                                   # undo normalisation
     bias1 = v1[M:]                                       # (C,)
 
@@ -208,26 +315,29 @@ def _greedytl(x, y, mask, src_w, src_mask, *, num_classes: int,
 
 
 @count_dispatch("greedytl")
-@partial(jax.jit, static_argnames=("num_classes", "k_max"))
+@partial(jax.jit, static_argnames=("num_classes", "k_max", "incremental"))
 def greedytl(x, y, mask, src_w, src_mask, *, num_classes: int,
              lam_src: float = 0.1, lam_x: float = 10.0,
-             lam_bias: float = 2.0, k_max: int = 16):
+             lam_bias: float = 2.0, k_max: int = 16,
+             incremental: bool = True):
     """Greedy source combination + gated local correction (see module doc).
 
     x: (n, F) padded local data; y: (n,); mask: (n,) row validity.
     src_w: (M, F+1, C) stacked source hypotheses; src_mask: (M,).
     Returns (w_eff (F+1, C), selected (M,) 0/1 source-selection mask).
+    ``incremental=False`` selects the PR-2 refactorize-per-step oracle.
     """
     return _greedytl(x, y, mask, src_w, src_mask, num_classes=num_classes,
                      lam_src=lam_src, lam_x=lam_x, lam_bias=lam_bias,
-                     k_max=k_max)
+                     k_max=k_max, incremental=incremental)
 
 
 @count_dispatch("greedytl_fleet")
-@partial(jax.jit, static_argnames=("num_classes", "k_max"))
+@partial(jax.jit, static_argnames=("num_classes", "k_max", "incremental"))
 def greedytl_fleet(x, y, mask, src_w, src_mask, *, num_classes: int,
                    lam_src: float = 0.1, lam_x: float = 10.0,
-                   lam_bias: float = 2.0, k_max: int = 16):
+                   lam_bias: float = 2.0, k_max: int = 16,
+                   incremental: bool = True):
     """GreedyTL at every DC of a padded fleet — ONE dispatch per window.
 
     x: (L, cap, F); y: (L, cap); mask: (L, cap). The source pool
@@ -245,15 +355,17 @@ def greedytl_fleet(x, y, mask, src_w, src_mask, *, num_classes: int,
     return jax.lax.map(
         lambda t: _greedytl(t[0], t[1], t[2], src_w, src_mask,
                             num_classes=num_classes, lam_src=lam_src,
-                            lam_x=lam_x, lam_bias=lam_bias, k_max=k_max),
+                            lam_x=lam_x, lam_bias=lam_bias, k_max=k_max,
+                            incremental=incremental),
         (x, y, mask))
 
 
 @count_dispatch("greedytl_fleet_stacked")
-@partial(jax.jit, static_argnames=("num_classes", "k_max"))
+@partial(jax.jit, static_argnames=("num_classes", "k_max", "incremental"))
 def greedytl_fleet_stacked(x, y, mask, src_w, src_mask, *, num_classes: int,
                            lam_src: float = 0.1, lam_x: float = 10.0,
-                           lam_bias: float = 2.0, k_max: int = 16):
+                           lam_bias: float = 2.0, k_max: int = 16,
+                           incremental: bool = True):
     """GreedyTL over a fleet where every DC carries its OWN source pool.
 
     Seed-stacked variant of :func:`greedytl_fleet`: several scenario
@@ -270,5 +382,6 @@ def greedytl_fleet_stacked(x, y, mask, src_w, src_mask, *, num_classes: int,
     return jax.lax.map(
         lambda t: _greedytl(t[0], t[1], t[2], t[3], t[4],
                             num_classes=num_classes, lam_src=lam_src,
-                            lam_x=lam_x, lam_bias=lam_bias, k_max=k_max),
+                            lam_x=lam_x, lam_bias=lam_bias, k_max=k_max,
+                            incremental=incremental),
         (x, y, mask, src_w, src_mask))

@@ -88,7 +88,13 @@ def loo_trials(ut, cc, a_cand, fitted_base, h_base, y, rmask, zj, dinv, *,
     R, D = ut.shape
     M = cc.shape[1]
     assert M <= MAX_CANDIDATES, M
-    bR = min(block_r, _round_up(R, 8))
+    if block_r < 1:
+        raise ValueError(f"block_r must be >= 1, got {block_r}")
+    # Clamp the tile to the padded row count, then snap it UP to the sublane
+    # multiple: a tuned/odd block_r (or R < 8) must never produce a tile
+    # that is not a multiple of 8, and the grid padding below must hold for
+    # any (R, block_r) combination — tail rows carry rmask=0 and add 0.
+    bR = _round_up(max(1, min(block_r, _round_up(R, 8))), 8)
     Rp = _round_up(R, bR)
     if Rp != R:
         pad = ((0, Rp - R),)

@@ -6,6 +6,7 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def mha_reference(q, k, v, *, causal=True, window=0, q_offset=0):
@@ -75,6 +76,52 @@ def loo_trials_inv_reference(AtA, Aty, A_rm, y, rmask, cmask, lam_d, M):
         return jnp.sum(loo ** 2)
 
     return jax.vmap(one)(jnp.arange(M))
+
+
+def greedy_select_refactor_reference(AtA, Aty, A_rm, y, rmask, src_mask,
+                                     lam_d, M, k_max=16):
+    """Full-refactorization greedy source selection — the per-step O(M·D³)
+    host loop the incremental factor carry replaces. Every step re-solves
+    the column-masked ridge of active ∪ {j} for all candidates j via
+    ``jnp.linalg.inv`` in float64 and accepts the best iff it improves the
+    LOO SSE. Ground truth for the incremental-carry property suite.
+
+    Returns (sel (M,) 0/1 numpy, objective trajectory [bias-only LOO,
+    then the accepted objective after each greedy step]).
+    """
+    AtA, Aty, A_rm = (np.asarray(v, np.float64) for v in (AtA, Aty, A_rm))
+    y, rmask, lam_d = (np.asarray(v, np.float64) for v in (y, rmask, lam_d))
+    src_mask = np.asarray(src_mask, np.float64)
+    D = AtA.shape[0]
+    C = D - M
+
+    def loo_full(cm):
+        cm2 = cm[:, None] * cm[None, :]
+        Ginv = np.linalg.inv(AtA * cm2 + np.diag(lam_d))
+        v = (Ginv @ (Aty * cm)) * cm
+        resid = (A_rm @ v - y) * rmask
+        h = np.sum(((A_rm * cm) @ Ginv) * (A_rm * cm), axis=-1)
+        loo = resid / np.maximum(1.0 - h, 0.1)
+        return float(np.sum(loo ** 2))
+
+    sel = np.zeros(M)
+    best = loo_full(np.concatenate([np.zeros(M), np.ones(C)]))
+    traj = [best]
+    for _ in range(min(k_max, M)):
+        objs = np.full(M, np.inf)
+        for j in range(M):
+            if sel[j] or not src_mask[j]:
+                continue
+            cm = np.concatenate([sel * src_mask, np.ones(C)])
+            cm[j] = 1.0
+            objs[j] = loo_full(cm)
+        j = int(np.argmin(objs))
+        if not np.isfinite(objs[j]) or objs[j] >= best:
+            break
+        sel[j] = 1.0
+        best = objs[j]
+        traj.append(best)
+    return sel, traj
 
 
 def rglru_reference(a, b, h0=None):

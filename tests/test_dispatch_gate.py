@@ -9,9 +9,11 @@ loop over DCs around ``train_svm``/``greedytl``) multiplies the count by
 """
 import dataclasses
 
+import numpy as np
 import pytest
 
-from repro.core.dispatch import dispatch_counts, reset_dispatch_counts
+from repro.core.dispatch import (dispatch_counts, dispatch_scope,
+                                 reset_dispatch_counts)
 from repro.core.scenario import ScenarioConfig, run_scenario, run_sweep
 from repro.core.svm import SAMPLE_BUCKETS
 from repro.data.synthetic_covtype import make_covtype_like
@@ -103,6 +105,62 @@ def test_scan_engine_O1_dispatches_regardless_of_windows(algo):
         counts[w] = c
     # tripling the window count must not change the dispatch profile
     assert counts[3] == counts[9], counts
+
+
+# ---------------------------------------------------------------------------
+# greedy inner loop: the incremental factor carry must live INSIDE the
+# existing while_loop — accepting k candidates is still exactly ONE jitted
+# dispatch per entry point, never k extra dispatches (a fallback to
+# host-side iteration over accepted steps would multiply every count below
+# by the greedy depth)
+# ---------------------------------------------------------------------------
+
+def _deep_greedy_fixture(n=160, n_src=12, seed=0):
+    """A problem whose greedy selection accepts many sources: each source
+    explains a disjoint feature block of the true boundary, so every
+    accepted step keeps improving the LOO error."""
+    import jax.numpy as jnp
+    F, C, M = 54, 7, 16
+    r = np.random.default_rng(seed)
+    src = np.zeros((M, F + 1, C), np.float32)
+    sm = np.zeros(M, np.float32)
+    w_total = np.zeros((F + 1, C), np.float32)
+    for i, blk in enumerate(np.array_split(np.arange(F), n_src)):
+        w = np.zeros((F + 1, C), np.float32)
+        w[blk] = r.normal(0, 1.0, (len(blk), C))
+        src[i] = w
+        sm[i] = 1.0
+        w_total += w
+    x = r.normal(size=(n, F)).astype(np.float32)
+    y = np.argmax(x @ w_total[:-1] + w_total[-1], axis=1).astype(np.int32)
+    return (jnp.asarray(x), jnp.asarray(y),
+            jnp.asarray(np.ones(n, np.float32)), jnp.asarray(src),
+            jnp.asarray(sm))
+
+
+def test_deep_greedy_refine_is_one_dispatch_per_entry_point():
+    import jax.numpy as jnp
+
+    from repro.core.greedytl import (greedytl, greedytl_fleet,
+                                     greedytl_fleet_stacked)
+
+    x, y, m, src, sm = _deep_greedy_fixture()
+    with dispatch_scope() as single:
+        _, sel = greedytl(x, y, m, src, sm, num_classes=7)
+    depth = int(np.asarray(sel).sum())
+    assert depth >= 8, f"fixture too shallow for the gate: depth={depth}"
+    assert single == {"greedytl": 1}, single
+
+    L = 2
+    xf, yf, mf = (jnp.stack([v] * L) for v in (x, y, m))
+    with dispatch_scope() as fleet:
+        greedytl_fleet(xf, yf, mf, src, sm, num_classes=7)
+    assert fleet == {"greedytl_fleet": 1}, fleet
+
+    srcs, sms = (jnp.stack([v] * L) for v in (src, sm))
+    with dispatch_scope() as stacked:
+        greedytl_fleet_stacked(xf, yf, mf, srcs, sms, num_classes=7)
+    assert stacked == {"greedytl_fleet_stacked": 1}, stacked
 
 
 def test_city_engine_O1_dispatches_regardless_of_windows():

@@ -147,6 +147,26 @@ def test_loo_trials_kernel_vs_ref(R, M, C, block_r):
     assert err < 2e-6, f"rel err={err}"
 
 
+@pytest.mark.parametrize("R", [1, 3, 5, 7, 9, 20])
+@pytest.mark.parametrize("block_r", [4, 8, 100, 256])
+def test_loo_trials_small_R_and_odd_tiles(R, block_r):
+    """Regression: R < 8, R not a multiple of 8, and tuned/odd block_r
+    values must all snap the row tile to a sublane multiple and pad the
+    tail with rmask=0 rows — not crash or mis-reduce. (The autotuner can
+    hand the kernel any block_r, and tiny fleets produce tiny R.)"""
+    shared, _, _ = _bordering_inputs(R, 16, 7, seed=R * 31 + block_r)
+    out = loo_trials(*shared, block_r=block_r, interpret=True)
+    ref = loo_trials_ref(*shared)
+    err = float(jnp.max(jnp.abs(out - ref))) / (float(jnp.max(ref)) + 1e-9)
+    assert err < 2e-6, f"rel err={err}"
+
+
+def test_loo_trials_rejects_nonpositive_block_r():
+    shared, _, _ = _bordering_inputs(64, 16, 7, seed=0)
+    with pytest.raises(ValueError):
+        loo_trials(*shared, block_r=0, interpret=True)
+
+
 @pytest.mark.parametrize("seed", [0, 1, 2])
 def test_loo_trials_matches_inverse_formulation(seed):
     """Cholesky-bordering objectives == the O(M D^3) inverse-based LOO the
