@@ -690,6 +690,99 @@ def bench_hosts_launcher(quick: bool):
     ]
 
 
+def bench_sweep_service(quick: bool):
+    """Sweep service (DESIGN.md §12): what streaming, caching and the
+    metrics plumbing actually buy/cost. Three headline numbers —
+    time-to-first-shard over the stream vs the all-shards barrier of the
+    launcher path (the latency the NDJSON stream removes), cold submit
+    vs exact-cache-hit wall time, and the per-call overhead of the statsd
+    counters the dispatch path now emits. Inline backend: shards run
+    in-process, so the numbers measure the control plane, not worker
+    spawn. Writes results/benchmarks/sweep_service.json."""
+    import threading
+
+    from benchmarks.paper_tables import RESULTS_DIR
+    from repro.core.experiment import get_preset
+    from repro.data.synthetic_covtype import make_covtype_like
+    from repro.service.client import ServiceClient
+    from repro.service.server import make_server
+    from repro.service.statsd import Statsd
+
+    data = make_covtype_like(seed=0)
+    spec = get_preset("smoke", windows=3 if quick else 8)
+    ref = spec.run(data).to_json()                 # warm + parity reference
+    backend = "hosts:channel=inline,n=2"
+
+    # barrier baseline (PR-5 path): nothing usable until every shard lands
+    t0 = time.time()
+    barrier = spec.run(data, parallel=backend)
+    barrier_us = (time.time() - t0) * 1e6
+    assert barrier.to_json() == ref, "barrier parity drifted"
+
+    httpd, _service = make_server(backend=backend)
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    client = ServiceClient(httpd.server_address[:2])
+
+    # cold streamed pass: time-to-first-shard and total, over real HTTP
+    t0 = time.time()
+    sub = client.submit(spec, data)
+    first_shard_us = None
+    for event in client.stream_events(sub["job"]):
+        if event["event"] == "shard" and first_shard_us is None:
+            first_shard_us = (time.time() - t0) * 1e6
+    cold_us = (time.time() - t0) * 1e6
+    assert client.result_text(sub["job"]) == ref, "service parity drifted"
+
+    # exact-cache hit: same spec again, served bytes — no recompute
+    t0 = time.time()
+    hit = client.run(spec, data)
+    hit_us = (time.time() - t0) * 1e6
+    assert hit.meta["service"]["cached"], "second submit missed the cache"
+    assert hit.to_json() == ref, "cache-hit parity drifted"
+    httpd.shutdown()
+
+    # statsd counter overhead (the per-attempt cost added to dispatch)
+    sink = Statsd()
+    n = 20_000
+    t0 = time.time()
+    for _ in range(n):
+        sink.increment("bench.counter", tags={"kind": "ok"})
+    statsd_us = (time.time() - t0) * 1e6 / n
+
+    payload = {
+        "preset": "smoke",
+        "windows": spec.configs()[0][1].windows,
+        "backend": backend,
+        "barrier_total_us": round(barrier_us, 1),
+        "stream_first_shard_us": round(first_shard_us, 1),
+        "stream_total_us": round(cold_us, 1),
+        "first_result_speedup_vs_barrier":
+            round(barrier_us / first_shard_us, 3),
+        "cache_hit_us": round(hit_us, 1),
+        "cache_hit_speedup_vs_cold": round(cold_us / hit_us, 3),
+        "statsd_increment_us": round(statsd_us, 3),
+        "parity": "bitwise (streamed merge, cache hit and barrier all "
+                  "JSON-identical to sequential)",
+        "note": "inline backend isolates control-plane cost; "
+                "time-to-first-shard is measured client-side over real "
+                "HTTP from submit to the first NDJSON shard event",
+    }
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "sweep_service.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+    return [
+        ("sweep_service_first_shard", first_shard_us,
+         f"barrier_us={barrier_us:.0f} "
+         f"speedup={payload['first_result_speedup_vs_barrier']:.2f}x "
+         f"parity=bitwise"),
+        ("sweep_service_cache_hit", hit_us,
+         f"cold_us={cold_us:.0f} "
+         f"speedup={payload['cache_hit_speedup_vs_cold']:.2f}x "
+         f"parity=bitwise"),
+        ("statsd_increment", statsd_us, f"n={n} tagged_counter"),
+    ]
+
+
 def bench_htl_trainer(quick: bool):
     """Paper's technique at LM scale: DCN traffic vs sync baseline."""
     import dataclasses
@@ -743,7 +836,7 @@ def main():
 
     print("name,us_per_call,derived")
     sections = [bench_sweep_api, bench_parallel_sweep,
-                bench_hosts_launcher, bench_greedytl,
+                bench_hosts_launcher, bench_sweep_service, bench_greedytl,
                 bench_greedytl_incremental,
                 bench_fleet_engine, bench_stacked_sweep,
                 bench_fleet_scaling, bench_kernels,

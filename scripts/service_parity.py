@@ -1,0 +1,138 @@
+#!/usr/bin/env python
+"""Sweep-service CI gate: the RPC control plane may never change the
+numbers — streamed, faulted, or cached.
+
+Boots the HTTP service in-process (ephemeral port), then for each preset
+grid submits the sweep over the wire and checks four things against the
+sequential in-process reference (DESIGN.md §12):
+
+1. **clean streamed pass** — shards dispatched through real worker
+   subprocesses (``local`` channel), streamed back as NDJSON and merged
+   incrementally client-side: merged JSON must be byte-identical;
+2. **fault-injected pass** (``--inject-failures``) — one worker is
+   really SIGKILLed mid-shard on its first attempt; the retry heals it
+   and the streamed merge still matches bitwise (submitted with
+   ``cache=bypass`` so the cache cannot mask the fault path);
+3. **cache-hit pass** — the same spec submitted again is served from the
+   exact result cache: ``cached=true``, the recorded
+   ``service.cache.hit`` counter moves, and the served bytes equal the
+   recomputed (and sequential) bytes — cache-hit == recompute;
+4. the fleet-health counters moved the way the passes imply (shard oks,
+   crash failures on the injected pass).
+
+    python scripts/service_parity.py --preset smoke --windows 3 \
+        --spec "hosts:channel=local,n=2,retries=1" --inject-failures
+    python scripts/service_parity.py --preset transport_grid --windows 3 \
+        --spec "hosts:channel=inline,n=2,retries=1"
+
+Wired into scripts/verify.sh (gates phase) and the named ``service-smoke``
+CI step, mirroring scripts/hosts_parity.py.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import threading
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def first_diff(a: str, b: str, context: int = 60) -> str:
+    k = next((i for i, (x, y) in enumerate(zip(a, b)) if x != y),
+             min(len(a), len(b)))
+    return (f"first divergence at byte {k}: "
+            f"...{a[max(0, k - context):k + context]!r} vs "
+            f"...{b[max(0, k - context):k + context]!r}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="smoke")
+    ap.add_argument("--windows", type=int, default=3)
+    ap.add_argument("--spec", default="hosts:channel=local,n=2,retries=1",
+                    help="hosts backend spec the service dispatches "
+                         "through")
+    ap.add_argument("--inject-failures", action="store_true",
+                    help="add a pass with one worker SIGKILLed mid-shard "
+                         "on its first attempt (cache bypassed so the "
+                         "fault path really runs)")
+    args = ap.parse_args()
+
+    from repro.core.experiment import get_preset
+    from repro.data.synthetic_covtype import make_covtype_like
+    from repro.service.client import ServiceClient
+    from repro.service.server import make_server
+    from repro.service.statsd import statsd
+
+    data = make_covtype_like(seed=0)
+    spec = get_preset(args.preset, windows=args.windows)
+    ref = spec.run(data, parallel="none").to_json()
+
+    httpd, _service = make_server(backend=args.spec)
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    client = ServiceClient(httpd.server_address[:2])
+    rc = 0
+
+    passes = [("clean streamed", dict(cache="use"), False)]
+    if args.inject_failures:
+        passes.append(("fault-injected",
+                       dict(cache="bypass",
+                            backend=f"{args.spec},backoff=0.01,"
+                                    f"inject_kill=0"), False))
+    passes.append(("cache-hit", dict(cache="use"), True))
+
+    for label, kwargs, want_cached in passes:
+        crashes_before = statsd.counter("launcher.shard.failures",
+                                        tags={"kind": "crash"})
+        hits_before = statsd.counter("service.cache.hit")
+        result = client.run(spec, data, **kwargs)
+        got = result.to_json()
+        svc = result.meta["service"]
+        status = client.status(svc["job"])
+        if got == ref:
+            print(f"service parity [{label}]: OK ({len(ref)} bytes "
+                  f"identical, {svc['n_shards']} shard(s), "
+                  f"{status['attempts_total']} attempt(s), "
+                  f"cached={svc['cached']})")
+        else:
+            print(f"service parity [{label}]: MISMATCH — "
+                  f"{first_diff(ref, got)}")
+            rc = 1
+        if svc["cached"] != want_cached:
+            print(f"service parity [{label}]: cached={svc['cached']}, "
+                  f"expected {want_cached}")
+            rc = 1
+        if want_cached:
+            if statsd.counter("service.cache.hit") <= hits_before:
+                print(f"service parity [{label}]: service.cache.hit "
+                      f"counter did not move")
+                rc = 1
+            served = client.result_text(svc["job"])
+            if served != ref:
+                print(f"service parity [{label}]: served cache bytes "
+                      f"differ from recompute — {first_diff(ref, served)}")
+                rc = 1
+        if label == "fault-injected":
+            crashed = statsd.counter("launcher.shard.failures",
+                                     tags={"kind": "crash"})
+            if crashed <= crashes_before:
+                print(f"service parity [{label}]: no crash failure "
+                      f"recorded — the injected SIGKILL never happened")
+                rc = 1
+
+    ok = statsd.counter("launcher.shard.ok")
+    if ok < 1:
+        print(f"service parity: launcher.shard.ok = {ok}, expected >= 1")
+        rc = 1
+    httpd.shutdown()
+    if rc == 0:
+        print("sweep service: bitwise-identical to sequential — streamed"
+              + (", under injected worker SIGKILL"
+                 if args.inject_failures else "")
+              + ", and from the exact result cache")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

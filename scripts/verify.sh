@@ -63,6 +63,14 @@ if [[ "$MODE" == "all" || "$MODE" == "gates" ]]; then
     # SIGKILLed mid-shard on its first attempt (DESIGN.md §8)
     python scripts/hosts_parity.py --preset smoke --windows 3 \
         --spec "hosts:channel=local,n=2,retries=1" --inject-failures
+    # sweep-service parity: sweeps submitted over HTTP stream per-shard
+    # NDJSON and merge client-side — bitwise-identical to sequential,
+    # clean, with one worker SIGKILLed mid-shard, and served from the
+    # exact result cache (DESIGN.md §12)
+    python scripts/service_parity.py --preset smoke --windows 3 \
+        --spec "hosts:channel=local,n=2,retries=1" --inject-failures
+    python scripts/service_parity.py --preset transport_grid --windows 3 \
+        --spec "hosts:channel=inline,n=2,retries=1"
     # scan-engine parity: the scan-over-windows engine's SweepResult JSON
     # must be byte-identical to the sequential fleet engine (DESIGN.md §10)
     python scripts/scan_parity.py --preset smoke --windows 4

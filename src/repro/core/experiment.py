@@ -32,6 +32,7 @@ atomic, reproducing the sequential result bitwise (DESIGN.md §7).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
 import json
 from dataclasses import dataclass, field
@@ -181,6 +182,64 @@ class SweepSpec:
         return [(lbl, dataclasses.replace(cfg, seed=s))
                 for lbl, cfg in rows for s in self.seeds]
 
+    # -- wire form + canonical hashing (sweep service, DESIGN.md §12) -------
+    WIRE_SCHEMA = 1
+
+    def to_wire(self) -> Dict[str, Any]:
+        """JSON-safe dict form of the whole spec tree — the sweep service's
+        submit payload (:mod:`repro.service`). Pure data: axes values,
+        variant overrides and the base config must already be JSON-safe
+        (they are for every ScenarioConfig field), so
+        ``from_wire(json.loads(json.dumps(to_wire())))`` reconstructs a
+        spec with an identical expansion."""
+        return {
+            "schema": self.WIRE_SCHEMA,
+            "name": self.name,
+            "base": dataclasses.asdict(self.base),
+            "axes": [[n, list(v)] for n, v in self.axes],
+            "mode": self.mode,
+            "label": self.label,
+            "variants": [[tmpl, dict(ov)] for tmpl, ov in self.variants],
+            "seeds": list(self.seeds),
+            "subspecs": [s.to_wire() for s in self.subspecs],
+        }
+
+    @classmethod
+    def from_wire(cls, payload: Mapping[str, Any]) -> "SweepSpec":
+        if payload.get("schema") != cls.WIRE_SCHEMA:
+            raise ValueError(f"unsupported SweepSpec wire schema "
+                             f"{payload.get('schema')!r} (this build reads "
+                             f"{cls.WIRE_SCHEMA})")
+        return cls(
+            name=payload["name"],
+            base=ScenarioConfig(**payload["base"]),
+            axes=tuple((n, tuple(v)) for n, v in payload["axes"]),
+            mode=payload["mode"],
+            label=payload["label"],
+            variants=tuple((tmpl, dict(ov))
+                           for tmpl, ov in payload["variants"]),
+            seeds=tuple(payload["seeds"]),
+            subspecs=tuple(cls.from_wire(s)
+                           for s in payload["subspecs"]))
+
+    def canonical_hash(self) -> str:
+        """Content hash of the *physical run list* — the exact-result-cache
+        key component (repro.service.cache, DESIGN.md §12).
+
+        Hashes the expanded ``configs()`` (labels + full config dicts) as
+        canonical JSON (sorted keys, compact separators), NOT the spec
+        tree, so the hash is invariant to dict key order, to process
+        restarts (no ids/addresses enter the digest) and to any spec
+        refactoring that expands to the same runs — while any axis-value,
+        variant, seed or base-field change lands in some config dict and
+        changes the digest. Property-tested in tests/test_service_cache.py.
+        """
+        runs = [[lbl, dataclasses.asdict(cfg)] for lbl, cfg in
+                self.configs()]
+        blob = json.dumps({"schema": self.WIRE_SCHEMA, "runs": runs},
+                          sort_keys=True, separators=(",", ":"))
+        return hashlib.sha256(blob.encode("utf-8")).hexdigest()
+
     # -- execution ----------------------------------------------------------
     def run(self, data: Dataset, *, stack: str = "auto",
             parallel: str = "none") -> "SweepResult":
@@ -314,6 +373,28 @@ class SweepResult:
 
     def summaries(self) -> Dict[str, Dict[str, Any]]:
         return {lbl: self.summary(lbl) for lbl in self.labels()}
+
+    # -- paging (sweep-service result endpoint, DESIGN.md §12) --------------
+    def page(self, page: int, per_page: int) -> "SweepResult":
+        """A record slice as its own :class:`SweepResult` (records
+        ``[page*per_page, (page+1)*per_page)``, original order). Paging
+        bookkeeping rides the out-of-band ``meta`` side channel
+        (``meta["paging"]``), so a page serializes exactly like any other
+        result and the full-result bytes stay the concatenation-free
+        parity surface. An out-of-range page is an empty page, not an
+        error — clients walk pages until one comes back empty."""
+        if page < 0 or per_page < 1:
+            raise ValueError(f"need page >= 0 and per_page >= 1, got "
+                             f"page={page} per_page={per_page}")
+        lo = page * per_page
+        out = SweepResult(name=self.name,
+                          records=list(self.records[lo:lo + per_page]))
+        out.meta["paging"] = {
+            "page": page, "per_page": per_page,
+            "total_records": len(self.records),
+            "total_pages": -(-len(self.records) // per_page),
+        }
+        return out
 
     # -- serialization ------------------------------------------------------
     def to_json(self, path: Optional[str] = None, *, indent: int = 1,

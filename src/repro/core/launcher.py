@@ -192,6 +192,16 @@ def _worker_env(extra_env: Optional[Dict[str, str]] = None) -> Dict[str, str]:
     return env
 
 
+def _stats():
+    """The process-wide statsd client (repro.service.statsd), resolved
+    lazily: the metrics module is stdlib-only and imports nothing from
+    repro.core, so the retry path can emit fleet-health counters/timers
+    (shard attempts, failures by kind, retries, attempt latency) without
+    the core layer depending on the service layer at import time."""
+    from repro.service.statsd import statsd
+    return statsd
+
+
 # ---------------------------------------------------------------------------
 # channels
 # ---------------------------------------------------------------------------
@@ -258,6 +268,45 @@ def _communicate(cmd: List[str], request: Dict[str, Any], *,
             "crash", f"worker on {where} exited {proc.returncode}; stderr "
             f"tail: {proc.stderr[-800:]!r}")
     return parse_response(proc.stdout)
+
+
+class InlineChannel(HostChannel):
+    """``inline`` / ``inline:n=K``: run shard requests *in this process*
+    through the same :func:`run_request` a worker would run — no spawn, no
+    import, no fresh jit cache. The sweep service's default backend
+    (DESIGN.md §12): a long-running server already paid import+compile
+    once, so per-shard subprocess cost would dominate every small job.
+
+    Attempts are serialized by a module-wide lock: the shared shard runner
+    snapshots the *global* dispatch counter per shard
+    (:func:`repro.core.parallel.run_shard_payload` resets then reads it),
+    so two in-process shards may never interleave. Streaming still works —
+    shards complete one by one and stream as they land; the slots only
+    bound how many jobs queue on the lock. Fault injection is *simulated*
+    (a scripted :class:`ChannelError`, never a real SIGKILL — that would
+    kill the server): retry-path tests run cheaply, while the real-kill
+    gate keeps using the ``local`` channel."""
+
+    _RUN_LOCK = threading.Lock()
+
+    def __init__(self, n: int = 1):
+        if n < 1:
+            raise ValueError(f"inline channel needs n >= 1, got {n}")
+        self.n = n
+
+    def slots(self) -> List[str]:
+        return [f"inline/{i}" for i in range(self.n)]
+
+    def run(self, slot, request, *, timeout=None, extra_env=None):
+        if (extra_env or {}).get(INJECT_ENV):
+            raise ChannelError("crash", f"inline worker on {slot}: "
+                               f"injected fault (simulated; inline never "
+                               f"SIGKILLs its own process)")
+        with InlineChannel._RUN_LOCK:
+            return run_request(request)
+
+    def describe(self) -> str:
+        return format_spec("inline", {"n": self.n}, sep=";")
 
 
 class LocalChannel(HostChannel):
@@ -460,6 +509,7 @@ class SlurmChannel(HostChannel):
 
 
 CHANNELS: Dict[str, Any] = {
+    "inline": InlineChannel,
     "local": LocalChannel,
     "ssh": SSHChannel,
     "slurm": SlurmChannel,
@@ -581,7 +631,16 @@ class HostsExecutor(SweepExecutor):
     def execute(self, labels, cfgs, data, *, stack):
         return self.execute_with_meta(labels, cfgs, data, stack=stack)[0]
 
-    def execute_with_meta(self, labels, cfgs, data, *, stack):
+    def execute_with_meta(self, labels, cfgs, data, *, stack,
+                          on_shard=None, stop=None):
+        """``on_shard(shard_index, response_dict)`` — when given — fires as
+        each shard's response lands (from the dispatching thread), which is
+        what the sweep service streams to its clients: the merge becomes
+        incremental instead of barriered. ``stop`` is an optional
+        :class:`threading.Event`; once set, no *new* shard attempt starts
+        and the run fails fast with a ``cancelled`` attempt log (job
+        cancellation, DESIGN.md §12). Neither affects the merged values —
+        both are pure control-plane hooks."""
         channel = self._resolve_channel()
         n = self.n if self.n is not None else max(1, len(channel.slots()))
         shards = [s for s in partition_runs(cfgs, n) if s]
@@ -596,9 +655,11 @@ class HostsExecutor(SweepExecutor):
             {"shard": k, "runs": list(idxs), "attempts": []}
             for k, idxs in enumerate(shards)]
         if channel.batch:
-            outs = self._dispatch_batch(channel, requests, logs)
+            outs = self._dispatch_batch(channel, requests, logs,
+                                        on_shard=on_shard, stop=stop)
         else:
-            outs = self._dispatch_slots(channel, requests, logs)
+            outs = self._dispatch_slots(channel, requests, logs,
+                                        on_shard=on_shard, stop=stop)
         results = merge_shard_payloads(
             len(cfgs), shards,
             [(r["result"], r["dispatch_counts"]) for r in outs])
@@ -611,13 +672,22 @@ class HostsExecutor(SweepExecutor):
         }}
         return results, meta
 
-    # -- interactive channels (local / ssh) ---------------------------------
-    def _dispatch_slots(self, channel, requests, logs):
+    # -- interactive channels (inline / local / ssh) ------------------------
+    def _dispatch_slots(self, channel, requests, logs, *,
+                        on_shard=None, stop=None):
         pool = _SlotPool(channel.slots())
+        stats = _stats()
 
         def run_one(k: int) -> Dict[str, Any]:
             failed_on: List[str] = []
             for attempt in range(1, self.retries + 2):
+                if stop is not None and stop.is_set():
+                    logs[k]["attempts"].append(
+                        {"attempt": attempt, "slot": None,
+                         "status": "cancelled"})
+                    raise LauncherError(f"shard {k} cancelled before "
+                                        f"attempt {attempt}",
+                                        logs[k]["attempts"])
                 slot = pool.acquire(avoid=failed_on)
                 extra_env = ({INJECT_ENV: "sigkill"}
                              if (self.inject_kill == k and attempt == 1)
@@ -631,21 +701,34 @@ class HostsExecutor(SweepExecutor):
                 except ChannelError as e:
                     pool.release(slot, failed=True)
                     failed_on.append(slot)
+                    elapsed = time.monotonic() - t0
+                    stats.increment("launcher.shard.attempts")
+                    stats.increment("launcher.shard.failures",
+                                    tags={"kind": e.kind})
+                    stats.timing("launcher.shard.attempt_ms",
+                                 elapsed * 1e3)
                     logs[k]["attempts"].append({
                         "attempt": attempt, "slot": slot,
                         "status": e.kind, "error": e.detail,
-                        "elapsed_s": round(time.monotonic() - t0, 3)})
+                        "elapsed_s": round(elapsed, 3)})
                     if attempt > self.retries:
                         raise LauncherError(
                             f"shard {k} failed {attempt} attempt(s), "
                             f"retry budget {self.retries} exhausted; "
                             f"last: {e}", logs[k]["attempts"]) from e
+                    stats.increment("launcher.shard.retries")
                     time.sleep(self.backoff * (2 ** (attempt - 1)))
                     continue
                 pool.release(slot, failed=False)
+                elapsed = time.monotonic() - t0
+                stats.increment("launcher.shard.attempts")
+                stats.increment("launcher.shard.ok")
+                stats.timing("launcher.shard.attempt_ms", elapsed * 1e3)
                 logs[k]["attempts"].append({
                     "attempt": attempt, "slot": slot, "status": "ok",
-                    "elapsed_s": round(time.monotonic() - t0, 3)})
+                    "elapsed_s": round(elapsed, 3)})
+                if on_shard is not None:
+                    on_shard(k, response)
                 return response
             raise AssertionError("unreachable")
 
@@ -655,31 +738,51 @@ class HostsExecutor(SweepExecutor):
             return list(tpool.map(run_one, range(len(requests))))
 
     # -- batch channels (slurm) ---------------------------------------------
-    def _dispatch_batch(self, channel, requests, logs):
+    def _dispatch_batch(self, channel, requests, logs, *,
+                        on_shard=None, stop=None):
+        stats = _stats()
         outs: List[Any] = [None] * len(requests)
         pending = list(range(len(requests)))
         for attempt in range(1, self.retries + 2):
+            if stop is not None and stop.is_set():
+                for k in pending:
+                    logs[k]["attempts"].append(
+                        {"attempt": attempt, "slot": None,
+                         "status": "cancelled"})
+                raise LauncherError(
+                    f"shard(s) {pending} cancelled before batch attempt "
+                    f"{attempt}",
+                    [a for k in pending for a in logs[k]["attempts"]])
             batch = channel.run_batch([requests[k] for k in pending],
                                       timeout=self.timeout)
             still: List[int] = []
             for k, result in zip(pending, batch):
                 entry = {"attempt": attempt, "slot": "slurm/array"}
+                stats.increment("launcher.shard.attempts")
                 if isinstance(result, ChannelError):
                     entry.update(status=result.kind, error=result.detail)
+                    stats.increment("launcher.shard.failures",
+                                    tags={"kind": result.kind})
                     still.append(k)
                 else:
                     try:
                         self._check(result, k)
                         outs[k] = result
                         entry.update(status="ok")
+                        stats.increment("launcher.shard.ok")
+                        if on_shard is not None:
+                            on_shard(k, result)
                     except ChannelError as e:
                         entry.update(status=e.kind, error=e.detail)
+                        stats.increment("launcher.shard.failures",
+                                        tags={"kind": e.kind})
                         still.append(k)
                 logs[k]["attempts"].append(entry)
             pending = still
             if not pending:
                 return outs
             if attempt <= self.retries:
+                stats.increment("launcher.shard.retries", len(pending))
                 time.sleep(self.backoff * (2 ** (attempt - 1)))
         raise LauncherError(
             f"shard(s) {pending} failed after {self.retries + 1} batch "

@@ -48,6 +48,7 @@ gated by scripts/hosts_parity.py.
 """
 from __future__ import annotations
 
+import threading
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -234,6 +235,62 @@ def run_shard_payload(labels: Sequence[str], cfgs: Sequence[ScenarioConfig],
     return payload, dispatch_counts()
 
 
+class ShardMerger:
+    """Incremental, order-stable merge of per-shard wire payloads.
+
+    The barrier-free counterpart of the all-at-once merge below (and the
+    machinery under it): shards write to disjoint run-index slots, so they
+    may arrive in *any* order — as NDJSON events stream in from the sweep
+    service (:mod:`repro.service`), as launcher retries land late, or
+    twice after a client reconnect replays part of a stream — and the
+    merged run list is identical to the sequential run's regardless
+    (property-tested in tests/test_sweep_service.py). All mutation is
+    lock-guarded: one merger may be fed from several streaming jobs'
+    threads, and each shard's dispatch counts fold into the process
+    counter exactly once even if its payload is replayed."""
+
+    def __init__(self, n_runs: int, shards: Sequence[Sequence[int]]):
+        self.shards = [list(s) for s in shards]
+        self._results: List[Optional[ScenarioResult]] = [None] * n_runs
+        self._done: set = set()
+        self._lock = threading.Lock()
+
+    def add(self, shard: int, payload: str, counts: dict) -> bool:
+        """Fold one shard's payload in; returns False (and does nothing)
+        when that shard was already merged — replays after a reconnect are
+        idempotent by construction."""
+        from repro.core.experiment import SweepResult
+
+        idxs = self.shards[shard]
+        shard_result = SweepResult.from_json(payload)
+        if len(shard_result.records) != len(idxs):
+            raise ValueError(
+                f"shard payload carries {len(shard_result.records)} records "
+                f"for a {len(idxs)}-run shard")
+        with self._lock:
+            if shard in self._done:
+                return False
+            self._done.add(shard)
+            merge_dispatch_counts(counts)
+            for i, rec in zip(idxs, shard_result.records):
+                self._results[i] = rec.to_scenario_result()
+        return True
+
+    def pending(self) -> List[int]:
+        with self._lock:
+            return [k for k in range(len(self.shards))
+                    if k not in self._done]
+
+    def results(self) -> List[ScenarioResult]:
+        """The full merged run list; raises if any shard is still missing
+        (an incremental merge is only a result once every shard landed)."""
+        missing = self.pending()
+        if missing:
+            raise ValueError(f"shard(s) {missing} not merged yet")
+        with self._lock:
+            return list(self._results)
+
+
 def merge_shard_payloads(n_runs: int, shards: Sequence[Sequence[int]],
                          outs: Sequence[Tuple[str, dict]]
                          ) -> List[ScenarioResult]:
@@ -241,20 +298,14 @@ def merge_shard_payloads(n_runs: int, shards: Sequence[Sequence[int]],
     run list: shard k's i-th record lands at the i-th index of shard k's
     partition slot, and every shard's dispatch counts fold into the parent
     counter (so the dispatch CI gate stays observable per shard). Shared
-    by the processes backend and the hosts launcher."""
-    from repro.core.experiment import SweepResult
-
-    results: List[Optional[ScenarioResult]] = [None] * n_runs
-    for idxs, (payload, counts) in zip(shards, outs):
-        shard_result = SweepResult.from_json(payload)
-        if len(shard_result.records) != len(idxs):
-            raise ValueError(
-                f"shard payload carries {len(shard_result.records)} records "
-                f"for a {len(idxs)}-run shard")
-        merge_dispatch_counts(counts)
-        for i, rec in zip(idxs, shard_result.records):
-            results[i] = rec.to_scenario_result()
-    return results
+    by the processes backend and the hosts launcher; the streaming sweep
+    service merges the same payloads incrementally via
+    :class:`ShardMerger` (which this wraps), so the two paths cannot
+    drift."""
+    merger = ShardMerger(n_runs, shards)
+    for k, (payload, counts) in enumerate(outs):
+        merger.add(k, payload, counts)
+    return merger.results()
 
 
 def _worker_run_shard(task: Tuple[List[str], List[ScenarioConfig],

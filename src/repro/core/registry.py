@@ -115,18 +115,27 @@ def register_factory(registry: Dict[str, Any], name: str, factory: Any,
 
 
 def resolve_spec(spec: str, factories: Dict[str, Any],
-                 cache: Dict[str, Any], kind: str) -> Any:
+                 cache: Dict[str, Any], kind: str, *,
+                 sep: str = ",", merge_unkeyed: bool = False) -> Any:
     """Shared spec-string resolution: parse → look up factory → construct
     with the params as kwargs → cache under both the given and the
     canonical spelling. Unknown names, malformed specs and unknown
     parameter *names* raise :class:`KeyError` (fail-fast registries);
     invalid parameter *values* propagate as the factory's
-    :class:`ValueError`."""
+    :class:`ValueError`.
+
+    ``sep``/``merge_unkeyed`` select the nested channel grammar (module
+    docstring) for registries whose parameter values are themselves spec
+    strings — the sweep service's config grammar
+    (``serve:port=8080;backend=hosts:channel=local,n=2``) resolves with
+    ``sep=";"``, ``merge_unkeyed=True`` so an embedded executor/channel
+    spec nests without escaping."""
     obj = cache.get(spec)
     if obj is not None:
         return obj
     try:
-        name, params = parse_spec(spec)
+        name, params = parse_spec(spec, sep=sep,
+                                  merge_unkeyed=merge_unkeyed)
     except ValueError as e:
         raise KeyError(str(e)) from e
     factory = factories.get(name)
@@ -138,5 +147,5 @@ def resolve_spec(spec: str, factories: Dict[str, Any],
     except TypeError as e:
         raise KeyError(f"bad parameters for {kind} {spec!r}: {e}") from e
     cache[spec] = obj
-    cache.setdefault(format_spec(name, params), obj)
+    cache.setdefault(format_spec(name, params, sep=sep), obj)
     return obj

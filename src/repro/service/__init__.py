@@ -1,0 +1,10 @@
+"""The sweep service layer (DESIGN.md §12): a streaming HTTP RPC control
+plane over the core sweep machinery — server, client, exact result cache
+and dependency-free statsd metrics. Stdlib-only on top of repro.core.
+
+Heavy imports are deferred: ``from repro.service import statsd`` must
+stay importable without pulling jax (the launcher's metrics hook relies
+on it)."""
+from repro.service.statsd import Statsd, statsd   # noqa: F401
+
+__all__ = ["Statsd", "statsd"]

@@ -1,0 +1,127 @@
+"""Exact sweep-result cache keyed by canonical config hash (DESIGN.md §12).
+
+The repo's bitwise-determinism contract — a sweep's ``SweepResult`` JSON
+is a pure function of (physical run list, dataset bytes, stack mode),
+identical across backends, shard counts, retries and worker crashes — is
+exactly the property that makes result caching *exact* rather than
+approximate: serving the stored bytes IS re-running the sweep. The
+service gate (scripts/service_parity.py) enforces this by diffing a
+cache hit byte-for-byte against a fresh recomputation.
+
+The key is a sha256 over the three inputs of that pure function:
+
+* ``SweepSpec.canonical_hash()`` — the expanded run list as canonical
+  JSON (sorted keys; invariant to dict key order, process restarts and
+  spec refactorings that expand identically; distinct for any
+  axis/seed/base change — property-tested in tests/test_service_cache.py);
+* the dataset digest — sha256 over the base64 buffer payloads of the
+  launcher wire codec (:func:`repro.core.launcher.encode_dataset`), i.e.
+  over the exact float bits every worker decodes;
+* the stack mode and the result-schema version (a schema bump must never
+  serve bytes written by an older reader's layout).
+
+Storage is an in-memory dict with an optional spill directory: entries
+written as ``<key>.json`` (atomic rename), re-read on miss — so a
+restarted service warms from disk, and two services sharing a directory
+share a cache. Hit/miss/store counters feed ``service.cache.*`` in
+:mod:`repro.service.statsd`.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import threading
+from typing import Any, Dict, Mapping, Optional
+
+from repro.service.statsd import statsd
+
+CACHE_SCHEMA = 1
+
+
+def dataset_digest(encoded: Mapping[str, Any]) -> str:
+    """sha256 of an encoded-dataset payload (wire codec of
+    :mod:`repro.core.launcher`): hashes dtype/shape/base64 buffers in
+    field order, so two datasets digest equal iff their bits are equal."""
+    h = hashlib.sha256()
+    for name in sorted(encoded["fields"]):
+        f = encoded["fields"][name]
+        h.update(name.encode())
+        h.update(str(f["dtype"]).encode())
+        h.update(str(f["shape"]).encode())
+        h.update(f["b64"].encode())
+    return h.hexdigest()
+
+
+def cache_key(spec_hash: str, data_digest: str, stack: str) -> str:
+    """The exact-result cache key: all inputs of the deterministic sweep
+    function, plus the schema version."""
+    blob = json.dumps({"schema": CACHE_SCHEMA, "spec": spec_hash,
+                       "data": data_digest, "stack": stack},
+                      sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+class ResultCache:
+    """Byte-exact result store: ``put`` the merged ``SweepResult`` JSON
+    text, ``get`` it back verbatim. Thread-safe (the service's job threads
+    store while request handlers look up)."""
+
+    def __init__(self, directory: Optional[str] = None,
+                 max_entries: int = 256):
+        if max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1, got {max_entries}")
+        self.directory = directory
+        self.max_entries = max_entries
+        self._mem: Dict[str, str] = {}
+        self._order: list = []          # insertion-ordered keys (LRU-ish)
+        self._lock = threading.Lock()
+        if directory:
+            os.makedirs(directory, exist_ok=True)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._mem)
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.directory, f"{key}.json")
+
+    def get(self, key: str) -> Optional[str]:
+        with self._lock:
+            text = self._mem.get(key)
+        if text is None and self.directory:
+            try:
+                with open(self._path(key)) as f:
+                    text = f.read()
+            except OSError:
+                text = None
+            if text is not None:
+                with self._lock:
+                    self._remember(key, text)
+        statsd.increment("service.cache.hit" if text is not None
+                         else "service.cache.miss")
+        return text
+
+    def put(self, key: str, text: str) -> None:
+        with self._lock:
+            self._remember(key, text)
+        if self.directory:
+            tmp = self._path(key) + ".tmp"
+            with open(tmp, "w") as f:
+                f.write(text)
+            os.replace(tmp, self._path(key))    # readers never see partials
+        statsd.increment("service.cache.store")
+
+    def _remember(self, key: str, text: str) -> None:
+        if key not in self._mem:
+            self._order.append(key)
+        self._mem[key] = text
+        while len(self._order) > self.max_entries:
+            evicted = self._order.pop(0)
+            self._mem.pop(evicted, None)
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            return {"entries": len(self._mem),
+                    "max_entries": self.max_entries,
+                    "directory": self.directory}

@@ -25,7 +25,8 @@ def test_real_hypothesis_is_installed_in_ci():
 
 
 @pytest.mark.parametrize("module", ["test_parallel_sweep", "test_launcher",
-                                    "test_transports"])
+                                    "test_transports", "test_sweep_service",
+                                    "test_service_cache"])
 def test_property_suites_bind_real_hypothesis_not_the_shim(module):
     """The try/except import in each property suite must have resolved to
     the real library: the shim's ``given`` lives in

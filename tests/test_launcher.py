@@ -116,7 +116,9 @@ def test_nested_spec_grammar_list_continuation():
 
 
 def test_get_channel_resolves_every_builtin():
-    assert sorted(CHANNELS) == ["local", "slurm", "ssh"]
+    assert sorted(CHANNELS) == ["inline", "local", "slurm", "ssh"]
+    assert get_channel("inline").slots() == ["inline/0"]
+    assert get_channel("inline:n=2").slots() == ["inline/0", "inline/1"]
     assert get_channel("local").slots() == ["local/0", "local/1"]
     assert get_channel("local:", default_slots=3).slots() == \
         ["local/0", "local/1", "local/2"]          # trailing ':' tolerated

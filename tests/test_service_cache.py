@@ -1,0 +1,201 @@
+"""Canonical config hashing + the exact result cache (DESIGN.md §12).
+
+The cache is only *exact* if the key is: ``SweepSpec.canonical_hash()``
+must be stable across dict key order, process restarts (fresh
+``PYTHONHASHSEED``) and wire round-trips, invariant to spec refactorings
+that expand to the same physical run list — and distinct for any
+axis-value, seed, variant or base-field change (the hypothesis property
+here). ``ResultCache`` itself must return stored bytes verbatim, spill
+to disk atomically, warm a restarted service from that directory, and
+count hits/misses into statsd.
+"""
+import dataclasses
+import json
+import subprocess
+import sys
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # deterministic shim, tests/_hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core.experiment import SweepSpec, get_preset
+from repro.core.launcher import encode_dataset
+from repro.core.scenario import ScenarioConfig
+from repro.data.synthetic_covtype import make_covtype_like
+from repro.service.cache import ResultCache, cache_key, dataset_digest
+from repro.service.statsd import statsd
+
+TECHS = ("4g", "wifi", "ble", "mesh:hops=2")
+ALGOS = ("star", "a2a")
+P_EDGE = (0.0, 0.03, 0.15, 0.5)
+
+
+def _spec(windows, algo_i, n_techs, p_i, n_seeds, aggregate):
+    base = ScenarioConfig(windows=windows, eval_every=1,
+                          algo=ALGOS[algo_i % len(ALGOS)],
+                          p_edge=P_EDGE[p_i % len(P_EDGE)],
+                          aggregate=bool(aggregate))
+    return SweepSpec("prop", base=base,
+                     axes={"tech": TECHS[:1 + n_techs % len(TECHS)]},
+                     label="t_{tech}").with_seeds(1 + n_seeds % 3)
+
+
+SPEC_ARGS = dict(windows=st.integers(min_value=2, max_value=6),
+                 algo_i=st.integers(min_value=0, max_value=1),
+                 n_techs=st.integers(min_value=0, max_value=3),
+                 p_i=st.integers(min_value=0, max_value=3),
+                 n_seeds=st.integers(min_value=0, max_value=2),
+                 aggregate=st.integers(min_value=0, max_value=1))
+
+
+# ---------------------------------------------------------------------------
+# canonical hash: stability
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(**SPEC_ARGS)
+def test_hash_stable_across_wire_roundtrip_and_key_order(
+        windows, algo_i, n_techs, p_i, n_seeds, aggregate):
+    """to_wire -> JSON text -> from_wire must preserve the hash; so must
+    reconstructing every config dict with reversed key order (canonical
+    JSON sorts keys, so dict order can never leak into the digest)."""
+    spec = _spec(windows, algo_i, n_techs, p_i, n_seeds, aggregate)
+    wire = json.loads(json.dumps(spec.to_wire()))
+    assert SweepSpec.from_wire(wire).canonical_hash() == \
+        spec.canonical_hash()
+    scrambled = dict(wire, base=dict(reversed(list(wire["base"].items()))))
+    assert SweepSpec.from_wire(scrambled).canonical_hash() == \
+        spec.canonical_hash()
+
+
+@settings(max_examples=10, deadline=None)
+@given(**SPEC_ARGS)
+def test_hash_invariant_to_equivalent_spec_refactoring(
+        windows, algo_i, n_techs, p_i, n_seeds, aggregate):
+    """One axis-spec vs a union of single-row specs that expands to the
+    identical (label, config) list: same physical runs, same hash."""
+    spec = _spec(windows, algo_i, n_techs, p_i, n_seeds, aggregate)
+    parts = [SweepSpec("part", base=dataclasses.replace(spec.base, tech=t),
+                       label=f"t_{t}")
+             for t in TECHS[:1 + n_techs % len(TECHS)]]
+    union = SweepSpec.union("prop", *parts, seeds=spec.seeds)
+    assert union.configs() == spec.configs()
+    assert union.canonical_hash() == spec.canonical_hash()
+
+
+def test_hash_stable_across_process_restarts():
+    """Two fresh interpreters with different hash seeds must agree with
+    the in-process digest — nothing address- or hashseed-dependent may
+    enter the canonical JSON."""
+    import os
+
+    prog = ("from repro.core.experiment import get_preset;"
+            "print(get_preset('smoke', windows=3).canonical_hash())")
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    outs = {
+        subprocess.run(
+            [sys.executable, "-c", prog], capture_output=True, text=True,
+            check=True,
+            env=dict(os.environ, PYTHONPATH=os.path.abspath(src),
+                     PYTHONHASHSEED=seed)).stdout.strip()
+        for seed in ("1", "4242")}
+    assert outs == {get_preset("smoke", windows=3).canonical_hash()}
+
+
+# ---------------------------------------------------------------------------
+# canonical hash: sensitivity
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(**SPEC_ARGS)
+def test_hash_distinct_for_any_axis_value_change(
+        windows, algo_i, n_techs, p_i, n_seeds, aggregate):
+    spec = _spec(windows, algo_i, n_techs, p_i, n_seeds, aggregate)
+    h = spec.canonical_hash()
+    # every single-knob perturbation must move the digest
+    perturbed = [
+        _spec(windows + 1, algo_i, n_techs, p_i, n_seeds, aggregate),
+        _spec(windows, algo_i + 1, n_techs, p_i, n_seeds, aggregate),
+        _spec(windows, algo_i, n_techs + 1, p_i, n_seeds, aggregate),
+        _spec(windows, algo_i, n_techs, p_i + 1, n_seeds, aggregate),
+        _spec(windows, algo_i, n_techs, p_i, n_seeds + 1, aggregate),
+        _spec(windows, algo_i, n_techs, p_i, n_seeds, 1 - aggregate),
+    ]
+    assert all(p.canonical_hash() != h for p in perturbed)
+
+
+def test_hash_sees_variants_and_labels():
+    base = SweepSpec("v", axes={"tech": ("4g",)}, label="row_{tech}")
+    relabeled = SweepSpec("v", axes={"tech": ("4g",)}, label="other_{tech}")
+    with_variant = SweepSpec("v", axes={"tech": ("4g",)},
+                             variants=(("row_{tech}", {}),
+                                       ("row_{tech}_agg",
+                                        {"aggregate": True})))
+    hashes = {base.canonical_hash(), relabeled.canonical_hash(),
+              with_variant.canonical_hash()}
+    assert len(hashes) == 3
+
+
+# ---------------------------------------------------------------------------
+# dataset digest + composite key
+# ---------------------------------------------------------------------------
+
+def test_dataset_digest_tracks_the_bits():
+    data = make_covtype_like(n_total=300, seed=0)
+    enc = encode_dataset(data)
+    assert dataset_digest(enc) == dataset_digest(
+        encode_dataset(make_covtype_like(n_total=300, seed=0)))
+    assert dataset_digest(enc) != dataset_digest(
+        encode_dataset(make_covtype_like(n_total=300, seed=1)))
+
+
+def test_cache_key_separates_every_component():
+    keys = {cache_key("s1", "d1", "auto"), cache_key("s2", "d1", "auto"),
+            cache_key("s1", "d2", "auto"), cache_key("s1", "d1", "off")}
+    assert len(keys) == 4
+    assert cache_key("s1", "d1", "auto") == cache_key("s1", "d1", "auto")
+
+
+# ---------------------------------------------------------------------------
+# ResultCache behavior
+# ---------------------------------------------------------------------------
+
+def test_cache_returns_stored_bytes_verbatim_and_counts():
+    cache = ResultCache()
+    text = '{"schema": 1, "name": "x", "records": []}\n  '
+    hits0 = statsd.counter("service.cache.hit")
+    misses0 = statsd.counter("service.cache.miss")
+    assert cache.get("k") is None
+    cache.put("k", text)
+    assert cache.get("k") == text               # verbatim, whitespace too
+    assert statsd.counter("service.cache.hit") == hits0 + 1
+    assert statsd.counter("service.cache.miss") == misses0 + 1
+
+
+def test_cache_spills_to_disk_and_warms_a_restart(tmp_path):
+    d = str(tmp_path / "cache")
+    first = ResultCache(directory=d)
+    first.put("deadbeef", "payload-bytes")
+    assert (tmp_path / "cache" / "deadbeef.json").read_text() == \
+        "payload-bytes"
+    # a "restarted service": fresh instance, same directory
+    second = ResultCache(directory=d)
+    assert len(second) == 0
+    assert second.get("deadbeef") == "payload-bytes"
+    assert len(second) == 1                     # re-cached in memory
+    assert second.get("unknown") is None
+
+
+def test_cache_evicts_insertion_order():
+    cache = ResultCache(max_entries=2)
+    for i in range(3):
+        cache.put(f"k{i}", f"v{i}")
+    assert cache.get("k0") is None              # evicted
+    assert cache.get("k1") == "v1"
+    assert cache.get("k2") == "v2"
+    assert cache.stats()["entries"] == 2
+    with pytest.raises(ValueError):
+        ResultCache(max_entries=0)

@@ -1,0 +1,476 @@
+"""Sweep service (DESIGN.md §12): streaming RPC server/client, incremental
+order-stable merge, cursor-resumable streams, cancellation, paging, the
+host-only boundary guard and the statsd metrics plumbing.
+
+The hard promise under test: a sweep submitted over HTTP and merged
+incrementally from streamed per-shard NDJSON events is **byte-identical**
+to the sequential in-process run — in any shard arrival order, across a
+mid-stream disconnect/reconnect (cursor resume + idempotent replay), on
+the retry path after an injected fault, and when served from the exact
+result cache.
+"""
+import functools
+import itertools
+import json
+import threading
+import time
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # deterministic shim, tests/_hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import launcher
+from repro.core.dispatch import dispatch_counts, reset_dispatch_counts
+from repro.core.experiment import SweepResult, get_preset, records_from
+from repro.core.launcher import (CHANNELS, ChannelError, HostChannel,
+                                 InlineChannel, get_channel,
+                                 register_channel)
+from repro.core.parallel import ShardMerger, partition_runs, run_shard_payload
+from repro.data.synthetic_covtype import make_covtype_like
+from repro.service.client import ClientError, ServiceClient
+from repro.service.server import (SERVICE_SCHEMA, ServiceError, SweepService,
+                                  make_server, service_from_spec)
+from repro.service.statsd import Statsd, statsd
+
+DATA = make_covtype_like(n_total=1400, seed=0)
+WINDOWS = 2
+
+
+@functools.lru_cache(maxsize=None)
+def _grid():
+    """Shared mini-grid (smoke preset: star x {4g, mesh} + a2a, 2 seeds —
+    at least two stack-key groups, so the 2-slot partition really has two
+    shards): spec, run list, sequential reference JSON, canned per-shard
+    payloads for merger property tests."""
+    spec = get_preset("smoke", windows=WINDOWS)
+    runs = spec.configs()
+    labels = [l for l, _ in runs]
+    cfgs = [c for _, c in runs]
+    ref_json = spec.run(DATA).to_json()
+    shards = [s for s in partition_runs(cfgs, 2) if s]
+    canned = []
+    for k, idxs in enumerate(shards):
+        payload, counts = run_shard_payload(
+            [labels[i] for i in idxs], [cfgs[i] for i in idxs], DATA, True)
+        canned.append((payload, counts))
+    return spec, labels, cfgs, shards, ref_json, canned
+
+
+@pytest.fixture(scope="module")
+def service_endpoint():
+    """One live server for the whole module (inline backend: shards run
+    in-process, so there is no per-test worker spawn cost)."""
+    httpd, service = make_server(backend="hosts:channel=inline,n=2")
+    thread = threading.Thread(target=httpd.serve_forever, daemon=True)
+    thread.start()
+    yield ServiceClient(httpd.server_address[:2]), service
+    httpd.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: streamed run == sequential run, bitwise
+# ---------------------------------------------------------------------------
+
+def test_streamed_run_matches_sequential_bitwise(service_endpoint):
+    client, _ = service_endpoint
+    spec, _, _, shards, ref_json, _ = _grid()
+    out = client.run(spec, DATA, cache="off")
+    assert out.to_json() == ref_json
+    svc = out.meta["service"]
+    assert svc["cached"] is False
+    assert svc["n_shards"] == len(shards) >= 2
+
+
+def test_cache_hit_serves_identical_bytes(service_endpoint):
+    client, service = service_endpoint
+    spec, _, _, _, ref_json, _ = _grid()
+    first = client.run(spec, DATA)            # miss (or hit from an
+    assert first.to_json() == ref_json        # earlier test — both fine)
+    hits_before = statsd.counter("service.cache.hit")
+    second = client.run(spec, DATA)
+    assert second.meta["service"]["cached"] is True
+    assert second.to_json() == ref_json
+    assert statsd.counter("service.cache.hit") == hits_before + 1
+    # the verbatim stored bytes equal a fresh client-side serialization
+    job = second.meta["service"]["job"]
+    assert client.result_text(job) == ref_json
+
+
+def test_cache_bypass_recomputes_but_stores(service_endpoint):
+    client, service = service_endpoint
+    spec, _, _, _, ref_json, _ = _grid()
+    client.run(spec, DATA)                    # ensure the entry exists
+    out = client.run(spec, DATA, cache="bypass")
+    assert out.meta["service"]["cached"] is False
+    assert out.to_json() == ref_json
+
+
+def test_fault_injected_retry_parity_over_http(service_endpoint):
+    """Inline channel simulates the crash (a scripted ChannelError — it
+    must never SIGKILL the server); the retry re-runs the identical
+    payload, so the streamed merge still matches bitwise."""
+    client, _ = service_endpoint
+    spec, _, _, _, ref_json, _ = _grid()
+    fails_before = statsd.counter("launcher.shard.failures",
+                                  tags={"kind": "crash"})
+    out = client.run(
+        spec, DATA, cache="off",
+        backend="hosts:channel=inline,n=2,retries=1,inject_kill=0")
+    assert out.to_json() == ref_json
+    assert statsd.counter("launcher.shard.failures",
+                          tags={"kind": "crash"}) > fails_before
+
+
+# ---------------------------------------------------------------------------
+# incremental merge: any arrival order, replays, concurrency
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(perm_i=st.integers(min_value=0, max_value=10 ** 6),
+       replay_i=st.integers(min_value=0, max_value=10 ** 6))
+def test_shard_merger_any_arrival_order_and_replays(perm_i, replay_i):
+    spec, labels, _, shards, ref_json, canned = _grid()
+    perms = list(itertools.permutations(range(len(shards))))
+    order = perms[perm_i % len(perms)]
+    reset_dispatch_counts()
+    merger = ShardMerger(len(labels), shards)
+    for k in order:
+        assert merger.add(k, *canned[k]) is True
+    # replay one shard: idempotent, counts must not double
+    counts_once = dispatch_counts()
+    assert merger.add(order[replay_i % len(order)],
+                      *canned[order[replay_i % len(order)]]) is False
+    assert dispatch_counts() == counts_once
+    merged = SweepResult(name=spec.name,
+                         records=records_from(labels, merger.results()))
+    assert merged.to_json() == ref_json
+
+
+def test_shard_merger_concurrent_adds_are_exactly_once():
+    """Many threads race to add every shard repeatedly: each shard merges
+    exactly once (True returned once), dispatch counts fold once, and the
+    merged bytes still match — the lock-guarded counter-merge satellite."""
+    spec, labels, _, shards, ref_json, canned = _grid()
+    reset_dispatch_counts()
+    merger = ShardMerger(len(labels), shards)
+    wins = []
+    barrier = threading.Barrier(8)
+
+    def feeder():
+        barrier.wait()
+        for k in range(len(shards)):
+            if merger.add(k, *canned[k]):
+                wins.append(k)
+
+    threads = [threading.Thread(target=feeder) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert sorted(wins) == list(range(len(shards)))     # exactly once each
+    expected = {}
+    for _, counts in canned:
+        for name, v in counts.items():
+            expected[name] = expected.get(name, 0) + v
+    assert dispatch_counts() == expected
+    merged = SweepResult(name=spec.name,
+                         records=records_from(labels, merger.results()))
+    assert merged.to_json() == ref_json
+
+
+def test_merger_rejects_wrong_sized_payload_and_reports_pending():
+    _, labels, _, shards, _, canned = _grid()
+    merger = ShardMerger(len(labels), shards)
+    assert merger.pending() == list(range(len(shards)))
+    with pytest.raises(ValueError, match="not merged yet"):
+        merger.results()
+    # shard 0 declared one run short: the canned payload no longer fits
+    short = [shards[0][:-1]] + [list(s) for s in shards[1:]]
+    with pytest.raises(ValueError, match="records"):
+        ShardMerger(len(labels), short).add(0, *canned[0])
+
+
+# ---------------------------------------------------------------------------
+# stream resumption: bounded responses, disconnect + cursor reconnect
+# ---------------------------------------------------------------------------
+
+def test_stream_reconnects_with_cursor_and_merges_bitwise(service_endpoint):
+    """max_events=1 forces the server to close the connection after every
+    event, so the client reconnects once per event with an advancing
+    cursor — the merged result must still be byte-identical."""
+    client, _ = service_endpoint
+    spec, _, _, _, ref_json, _ = _grid()
+    conns_before = statsd.counter("service.stream.connections")
+    out = client.run(spec, DATA, cache="off", max_events_per_conn=1)
+    assert out.to_json() == ref_json
+    # one connection per event (shards + terminal) => strictly more than
+    # one stream connection was opened
+    assert statsd.counter("service.stream.connections") - conns_before >= 3
+
+
+def test_mid_stream_disconnect_then_manual_cursor_resume(service_endpoint):
+    """Drop the stream after the first event (client side), then resume
+    from the cursor on a fresh connection: the two segments cover every
+    event exactly once-or-more, and the merge is byte-identical."""
+    client, _ = service_endpoint
+    spec, labels, _, _, ref_json, _ = _grid()
+    sub = client.submit(spec, DATA, cache="off")
+    merger = ShardMerger(len(labels), sub["shards"])
+
+    first = client.stream_events(sub["job"])
+    ev0 = next(e for e in first if e["event"] == "shard")
+    merger.add(ev0["shard"], ev0["result"], ev0["dispatch_counts"])
+    first.close()                               # simulated disconnect
+
+    for ev in client.stream_events(sub["job"], cursor=ev0["seq"] + 1):
+        if ev["event"] == "shard":
+            merger.add(ev["shard"], ev["result"], ev["dispatch_counts"])
+    merged = SweepResult(name=spec.name,
+                         records=records_from(labels, merger.results()))
+    assert merged.to_json() == ref_json
+    # resuming from cursor 0 replays everything; the merger stays correct
+    replays = [e for e in client.stream_events(sub["job"], cursor=0)
+               if e["event"] == "shard"]
+    assert {e["shard"] for e in replays} == set(range(sub["n_shards"]))
+    assert all(merger.add(e["shard"], e["result"],
+                          e["dispatch_counts"]) is False for e in replays)
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: status, cancel, paging, errors
+# ---------------------------------------------------------------------------
+
+class _GateChannel(HostChannel):
+    """Test channel: the first attempt blocks on a class event, so a job
+    is reliably observable mid-flight; later attempts run inline."""
+    started = threading.Event()
+    release = threading.Event()
+    _first = threading.Lock()
+    _taken = False
+
+    def __init__(self, n: int = 1):
+        self.n = n
+
+    def slots(self):
+        return [f"gate/{i}" for i in range(self.n)]
+
+    def run(self, slot, request, *, timeout=None, extra_env=None):
+        with _GateChannel._first:
+            hold = not _GateChannel._taken
+            _GateChannel._taken = True
+        if hold:
+            _GateChannel.started.set()
+            assert _GateChannel.release.wait(30), "gate never released"
+        return launcher.run_request(request)
+
+
+@pytest.fixture
+def gate_channel():
+    # registered per-test so the global CHANNELS registry stays pristine
+    # for the rest of the suite (test_launcher asserts its exact contents)
+    register_channel("gatetest", _GateChannel)
+    try:
+        yield
+    finally:
+        launcher.CHANNELS.pop("gatetest", None)
+
+
+def test_cancel_stops_pending_shards_and_streams_terminal(
+        service_endpoint, gate_channel):
+    client, _ = service_endpoint
+    spec, _, _, shards, _, _ = _grid()
+    assert len(shards) >= 2       # one blocks, one must get cancelled
+    # two shards, one slot: shard 0 blocks on the gate while shard 1
+    # queues — the cancel must reach shard 1 before it ever dispatches
+    sub = client.submit(spec, DATA, cache="off",
+                        backend="hosts:channel=gatetest,n=2")
+    assert sub["n_shards"] == 2
+    assert _GateChannel.started.wait(30)
+    assert client.status(sub["job"])["state"] == "running"
+    client.cancel(sub["job"])
+    _GateChannel.release.set()
+    events = list(client.stream_events(sub["job"]))
+    assert events[-1]["event"] == "error"
+    assert events[-1]["state"] == "cancelled"
+    assert client.status(sub["job"])["state"] == "cancelled"
+    with pytest.raises(ClientError) as err:
+        client.result_text(sub["job"])
+    assert err.value.status == 409
+
+
+def test_results_paging_partitions_the_record_list(service_endpoint):
+    client, _ = service_endpoint
+    spec, _, _, _, ref_json, _ = _grid()
+    job = client.run(spec, DATA).meta["service"]["job"]
+    full = SweepResult.from_json(ref_json)
+    per = 3
+    pages, page = [], 0
+    while True:
+        chunk = client.result_page(job, page, per)
+        if not chunk.records:
+            break
+        assert chunk.meta["paging"]["total_records"] == len(full.records)
+        pages.extend(chunk.records)
+        page += 1
+    assert [r.label for r in pages] == [r.label for r in full.records]
+    assert SweepResult(name=full.name, records=pages).to_json() == ref_json
+    with pytest.raises(ClientError) as err:
+        client.result_page(job, 0, 0)
+    assert err.value.status == 400
+
+
+def test_http_errors_are_structured(service_endpoint):
+    client, _ = service_endpoint
+    with pytest.raises(ClientError) as err:
+        client.status("job-999999")
+    assert err.value.status == 404
+    with pytest.raises(ClientError) as err:
+        client._request("POST", "/v1/jobs", {"schema": 99})
+    assert err.value.status == 400
+    with pytest.raises(ClientError) as err:
+        client._request("GET", "/v1/nope")
+    assert err.value.status == 404
+
+
+def test_submit_rejects_bad_spec_and_backend(service_endpoint):
+    client, _ = service_endpoint
+    spec, *_ = _grid()
+    with pytest.raises(ClientError) as err:
+        client.submit(spec, DATA, backend="processes:n=2")
+    assert "hosts" in err.value.detail
+    with pytest.raises(ClientError) as err:
+        client.submit(spec, DATA, stack="sideways")
+    assert err.value.status == 400
+    with pytest.raises(ClientError) as err:
+        client._request("POST", "/v1/jobs",
+                        {"schema": SERVICE_SCHEMA, "spec": {"schema": 1},
+                         "data": {"kind": "arrays", "fields": {}}})
+    assert err.value.status == 400
+
+
+# ---------------------------------------------------------------------------
+# the host-only service boundary
+# ---------------------------------------------------------------------------
+
+def test_device_buffers_never_cross_the_service_boundary():
+    """assert_host_only guards both directions: a submit payload (client
+    side and server side) and a streamed shard response carrying a jax
+    device buffer are refused before they touch the wire."""
+    import jax.numpy as jnp
+
+    spec, *_ = _grid()
+    poisoned = {"kind": "arrays", "fields": {},
+                "sneaky": jnp.zeros((2,))}
+    client = ServiceClient(("127.0.0.1", 1))    # never connected
+    with pytest.raises(TypeError, match="device buffer"):
+        client.submit(spec, poisoned)
+    service = SweepService(backend="hosts:channel=inline,n=1")
+    with pytest.raises(TypeError, match="device buffer"):
+        service.submit({"schema": SERVICE_SCHEMA, "spec": spec.to_wire(),
+                        "data": poisoned})
+
+
+def test_eval_cache_is_not_picklable_across_the_boundary():
+    import pickle
+
+    from repro.core.scenario import EvalCache
+
+    with pytest.raises(TypeError):
+        pickle.dumps(EvalCache())
+
+
+# ---------------------------------------------------------------------------
+# backends, spec grammar, metrics
+# ---------------------------------------------------------------------------
+
+def test_inline_channel_registered_and_serialized():
+    assert "inline" in CHANNELS
+    ch = get_channel("inline:n=3")
+    assert ch.slots() == ["inline/0", "inline/1", "inline/2"]
+    assert ch.describe() == "inline:n=3"
+    with pytest.raises(ValueError):
+        InlineChannel(n=0)
+    # simulated fault: a scripted ChannelError, never a real SIGKILL
+    with pytest.raises(ChannelError, match="simulated"):
+        ch.run("inline/0", {}, extra_env={launcher.INJECT_ENV: "sigkill"})
+
+
+def test_service_spec_grammar_builds_a_server(tmp_path):
+    httpd, service = service_from_spec(
+        f"serve:port=0;backend=hosts:channel=inline,n=2;"
+        f"cache_dir={tmp_path / 'c'}")
+    try:
+        assert service.backend == "hosts:channel=inline,n=2"
+        assert service.cache.directory == str(tmp_path / "c")
+    finally:
+        httpd.server_close()
+    with pytest.raises(ValueError, match="serve"):
+        service_from_spec("listen:port=0")
+    with pytest.raises(ServiceError):
+        SweepService(backend="hosts:channel=nosuch,n=2")
+
+
+def test_metrics_endpoint_exposes_fleet_health(service_endpoint):
+    client, _ = service_endpoint
+    spec, *_ = _grid()
+    client.run(spec, DATA)
+    m = client.metrics()
+    counters, timers = m["statsd"]["counters"], m["statsd"]["timers"]
+    assert counters["service.jobs.submitted"] >= 1
+    assert counters["launcher.shard.ok"] >= 2
+    assert timers["service.job.wall_ms"]["count"] >= 1
+    assert timers["launcher.shard.attempt_ms"]["avg_ms"] > 0
+    assert m["cache"]["entries"] >= 1
+    assert m["jobs"]["total"] >= 1
+    assert client.health()["status"] == "ok"
+
+
+# ---------------------------------------------------------------------------
+# statsd unit surface
+# ---------------------------------------------------------------------------
+
+def test_statsd_counters_gauges_timers_and_tags():
+    s = Statsd()
+    s.increment("a")
+    s.increment("a", 2)
+    s.increment("fail", tags={"kind": "crash"})
+    s.gauge("depth", 7)
+    s.timing("lat", 10.0)
+    s.timing("lat", 30.0)
+    snap = s.snapshot()
+    assert snap["counters"] == {"a": 3, "fail|kind=crash": 1}
+    assert snap["gauges"] == {"depth": 7.0}
+    t = snap["timers"]["lat"]
+    assert (t["count"], t["min_ms"], t["max_ms"], t["avg_ms"]) == \
+        (2, 10.0, 30.0, 20.0)
+    assert s.counter("fail", tags={"kind": "crash"}) == 1
+    with s.timed("block"):
+        time.sleep(0.002)
+    assert s.snapshot()["timers"]["block"]["last_ms"] >= 1.0
+    s.reset()
+    assert s.snapshot()["counters"] == {}
+
+
+def test_statsd_udp_emission_speaks_the_line_protocol():
+    import socket
+
+    sock = socket.socket(socket.AF_INET, socket.SOCK_DGRAM)
+    sock.bind(("127.0.0.1", 0))
+    sock.settimeout(5)
+    port = sock.getsockname()[1]
+    s = Statsd(addr=f"127.0.0.1:{port}")
+    s.increment("jobs.done", tags={"state": "ok"})
+    s.timing("lat", 12.5)
+    lines = {sock.recvfrom(4096)[0].decode() for _ in range(2)}
+    sock.close()
+    assert "repro.jobs.done:1|c|#state:ok" in lines
+    assert "repro.lat:12.5|ms" in lines
+
+
+def test_statsd_bad_address_is_inert():
+    s = Statsd(addr="not-an-address")
+    s.increment("x")                      # must not raise
+    assert s.counter("x") == 1
