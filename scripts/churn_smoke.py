@@ -1,0 +1,108 @@
+#!/usr/bin/env python
+"""Churn-smoke CI gate: battery-driven DC churn must degrade gracefully.
+
+Runs one scenario twice on the fleet engine — without a battery budget and
+with a depleting one — and asserts the energy-ledger feedback loop
+(DESIGN.md §13) actually closes:
+
+* the battery run emits zero-energy ``churn`` ledger events (mules DO
+  deplete at this budget);
+* a depleted mule stops accruing collection events from its death window
+  on (the ledger shows no ``sensor->SMk`` charge after ``SMk``'s churn
+  event) — dead DCs must not keep spending;
+* the F1 curve stays finite (the shrinking fleet never poisons the
+  model with NaNs) and the run is strictly cheaper than the un-churned
+  baseline;
+* fleet and scan engines agree bitwise on the churned scenario (curve
+  AND ledger) — churn is host-replayed identically by both drivers.
+
+    python scripts/churn_smoke.py --windows 6 --battery-mj 25
+
+Wired into scripts/verify.sh and the CI ``churn-smoke`` step.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--windows", type=int, default=6)
+    ap.add_argument("--battery-mj", type=float, default=25.0)
+    ap.add_argument("--algo", default="star")
+    ap.add_argument("--tech", default="4g")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.core.scenario import (ScenarioConfig, run_scenario,
+                                     validate_config)
+    from repro.data.synthetic_covtype import make_covtype_like
+
+    data = make_covtype_like(seed=0)
+    base_cfg = ScenarioConfig(windows=args.windows, eval_every=1,
+                              algo=args.algo, tech=args.tech,
+                              seed=args.seed, engine="fleet")
+    churn_cfg = dataclasses.replace(base_cfg, battery_mj=args.battery_mj)
+    for cfg in (base_cfg, churn_cfg):
+        validate_config(cfg)
+
+    base = run_scenario(base_cfg, data)
+    churned = run_scenario(churn_cfg, data)
+
+    rc = 0
+    churn_events = [e for e in churned.ledger.events
+                    if e["purpose"] == "churn"]
+    if not churn_events:
+        print(f"FAIL: battery {args.battery_mj} mJ over {args.windows} "
+              f"windows depleted no mule — the feedback loop never fired")
+        rc = 1
+    if any(e["mj"] != 0.0 for e in churn_events):
+        print("FAIL: churn events must be zero-energy ledger markers")
+        rc = 1
+
+    # dead DCs stop accruing: no collection charge at or after the death
+    # window (collection events are per-window, in window order)
+    deaths = {}
+    for e in churn_events:
+        name, w = e["what"].split(" depleted@w")
+        deaths[name] = int(w)
+    for name, died_at in sorted(deaths.items()):
+        seen = sum(1 for e in churned.ledger.events
+                   if e["what"] == f"sensor->{name}")
+        if seen > died_at:
+            print(f"FAIL: {name} depleted at window {died_at} but has "
+                  f"{seen} collection charges — dead DCs keep spending")
+            rc = 1
+
+    if not all(math.isfinite(v) for v in churned.f1_curve):
+        print(f"FAIL: non-finite F1 under churn: {churned.f1_curve}")
+        rc = 1
+    if not churned.energy_total < base.energy_total:
+        print(f"FAIL: churned run spent {churned.energy_total:.1f} mJ, "
+              f"baseline {base.energy_total:.1f} mJ — depleted mules "
+              f"must reduce fleet spend")
+        rc = 1
+
+    scan = run_scenario(dataclasses.replace(churn_cfg, engine="scan"),
+                        data)
+    if scan.f1_curve != churned.f1_curve or \
+            scan.ledger.events != churned.ledger.events:
+        print("FAIL: scan engine diverges from fleet engine under churn")
+        rc = 1
+
+    if rc == 0:
+        print(f"churn smoke: OK ({len(deaths)} mule(s) depleted "
+              f"{sorted(deaths)}, energy {churned.energy_total:.1f} < "
+              f"{base.energy_total:.1f} mJ, final F1 "
+              f"{churned.f1_curve[-1]:.3f}, scan==fleet bitwise)")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

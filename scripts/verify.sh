@@ -80,6 +80,10 @@ if [[ "$MODE" == "all" || "$MODE" == "gates" ]]; then
     XLA_FLAGS="--xla_force_host_platform_device_count=8" \
         python scripts/city_smoke.py --fleet-size 100000 --windows 6 \
         --baseline-windows 2 --expect-devices 8
+    # churn-smoke: battery-driven DC churn degrades gracefully — depleted
+    # mules stop accruing ledger events, F1 stays finite, scan==fleet
+    # bitwise under churn (DESIGN.md §13)
+    python scripts/churn_smoke.py --windows 6 --battery-mj 25
 fi
 
 if [[ "$MODE" == "all" || "$MODE" == "bench" ]]; then

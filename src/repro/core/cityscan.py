@@ -133,20 +133,24 @@ def _plan_scenario(cfg, data: Dataset) -> Tuple[List[_WindowPlan], Ledger]:
     gather events through the same Topology patterns), identical AP/center
     election and single-DC early exits. Only the jitted numerics are left
     for the scan program."""
-    from repro.core.scenario import collect_window
+    from repro.core.scenario import ChurnBook, build_stream, collect_window
 
     rng = np.random.default_rng(cfg.seed)
     ledger = Ledger()
-    n_total = cfg.windows * cfg.obs_per_window
-    order = rng.permutation(len(data.y_train))[:n_total]
-    sx = data.x_train[order].astype(np.float32)
-    sy = data.y_train[order].astype(np.int32)
+    # realism axis rides along for free: the (possibly drifted) stream
+    # comes from the shared build_stream, churn/byzantine faults happen
+    # inside the shared collect_window — a churned-away window becomes an
+    # empty plan, masked by the scan program's ``learn`` flag (alive-state
+    # masking: jitted shapes never change, dead fleets are zero rows)
+    sx, sy = build_stream(cfg, data, rng)
+    churn = None if cfg.battery_mj is None else ChurnBook(cfg.battery_mj)
 
     plans: List[_WindowPlan] = []
     prev_exists = False
     for t in range(cfg.windows):
         s = slice(t * cfg.obs_per_window, (t + 1) * cfg.obs_per_window)
-        dcs = collect_window(cfg, rng, sx[s], sy[s], ledger)
+        dcs = collect_window(cfg, rng, sx[s], sy[s], ledger,
+                             window=t, churn=churn)
         if cfg.aggregate:
             dcs = apply_aggregation_heuristic(dcs, ledger, cfg.tech)
         live = [d for d in dcs if d.n > 0]
@@ -245,10 +249,14 @@ def _pack_plan(cfg, plans: List[_WindowPlan]) -> dict:
 # ---------------------------------------------------------------------------
 
 @lru_cache(maxsize=None)
-def _scan_program(algo: str, num_classes: int, iters: int):
+def _scan_program(algo: str, num_classes: int, iters: int,
+                  trim: float = 0.0):
     """One jitted lax.scan over windows; jit re-specializes per block shape
     (W, L, cap, rcap), all of which are bucketed, so the executable cache
-    stays small across a sweep."""
+    stays small across a sweep. ``trim`` > 0 swaps the A2A combine for the
+    coordinate-wise trimmed mean (robust_agg="trim:frac=..."); the trace
+    branches at Python level, so ``trim == 0`` compiles the exact
+    pre-robust combine graph."""
 
     def body(carry, inp, eta, x_test, y_oh):
         w, has_g = carry
@@ -271,7 +279,24 @@ def _scan_program(algo: str, num_classes: int, iters: int):
                                      num_classes=num_classes)[0],
                 (inp["xr"], inp["yr"], inp["mr"]))       # (L, F+1, C)
             nl = jnp.maximum(inp["n_live"], 1.0)
-            multi_new = jnp.einsum("l,lfc->fc", inp["dcm"], refined) / nl
+            if trim > 0.0:
+                # trimmed-mean combine over the LIVE rows only: dead and
+                # padding rows are pushed past every finite value so the
+                # per-window sort stacks them at the top, then the kept
+                # band [k, n_live - k) is averaged — the device analogue
+                # of repro.core.metrics.trimmed_mean (F1 parity with the
+                # host engines is at prediction level, like the mean path)
+                big = jnp.float32(3.4e38)
+                vals = jnp.where(inp["dcm"][:, None, None] > 0,
+                                 refined, big)
+                srt = jnp.sort(vals, axis=0)
+                k = jnp.floor(jnp.float32(trim) * nl)
+                pos = jnp.arange(refined.shape[0], dtype=jnp.float32)
+                keep = ((pos >= k) & (pos < nl - k)).astype(refined.dtype)
+                multi_new = (jnp.einsum("l,lfc->fc", keep, srt)
+                             / jnp.maximum(nl - 2.0 * k, 1.0))
+            else:
+                multi_new = jnp.einsum("l,lfc->fc", inp["dcm"], refined) / nl
         else:
             multi_new = _greedytl(inp["xr"], inp["yr"], inp["mr"], src,
                                   src_mask, num_classes=num_classes)[0]
@@ -307,10 +332,13 @@ def run_scenario_scan(cfg, data: Dataset):
     streamed confusion counts)."""
     from repro.core.scenario import ScenarioResult
 
+    from repro.core.scenario import resolve_robust
+
     plans, ledger = _plan_scenario(cfg, data)
     inputs = jax.tree.map(jnp.asarray, _pack_plan(cfg, plans))
     x_test, y_oh = _eval_arrays(data)
-    program = _scan_program(cfg.algo, NUM_CLASSES, cfg.train_iters)
+    program = _scan_program(cfg.algo, NUM_CLASSES, cfg.train_iters,
+                            resolve_robust(cfg.robust_agg))
     cms = np.asarray(_dispatch_scan(program, inputs,
                                     jnp.float32(cfg.global_update_rate),
                                     x_test, y_oh))
@@ -327,13 +355,18 @@ def city_fleet_pad(fleet_size: int) -> int:
     return fleet_cap(fleet_size)
 
 
-def _city_round(w, has_g, x, y, m, valid, gid, l0, eta, x_test, y_oh, *,
+def _city_round(w, has_g, x, y, m, alive, gid, l0, eta, x_test, y_oh, *,
                 num_classes: int, iters: int, shards: int):
     """One city StarHTL round; identical math sharded or not. ``x``/``y``/
     ``m`` are this window's per-DC datasets (local shard rows), ``gid`` the
-    global DC ids. All cross-DC combination is either an exact one-hot psum
-    (source pool, center dataset) or a lexicographic max (entropy election),
-    so the round is bitwise shard-count invariant."""
+    global DC ids, ``alive`` the churn-aware membership mask (valid AND
+    battery not yet depleted — without churn it equals the plain validity
+    mask and every value below is bitwise what it was pre-churn). All
+    cross-DC combination is either an exact one-hot psum (source pool,
+    center dataset) or a lexicographic max (entropy election), so the
+    round is bitwise shard-count invariant. Returns ``(w2, cm, cg, do)``
+    where ``do`` flags whether a learning round ran (>= 2 DCs alive; a
+    churned-to-nothing fleet keeps ``w`` untouched)."""
     K = x.shape[1]
     base = jax.vmap(
         lambda xi, yi, mi: _train_svm(xi, yi, mi, num_classes=num_classes,
@@ -346,9 +379,10 @@ def _city_round(w, has_g, x, y, m, valid, gid, l0, eta, x_test, y_oh, *,
     p = cnt / tot[:, None]
     ent = -jnp.sum(jnp.where(p > 0, p * jnp.log(p), 0.0), axis=1) \
         / jnp.log(float(num_classes))
-    ent = jnp.where(valid, ent, -1.0)
+    ent = jnp.where(alive, ent, -1.0)
     li = jnp.argmax(ent)                       # first max = lowest local gid
     ce, cg = ent[li], gid[li]
+    n_alive = jnp.sum(alive.astype(jnp.float32))
     if shards > 1:
         es = jax.lax.all_gather(ce, FLEET_AXIS)
         gs = jax.lax.all_gather(cg, FLEET_AXIS)
@@ -357,14 +391,17 @@ def _city_round(w, has_g, x, y, m, valid, gid, l0, eta, x_test, y_oh, *,
             better = (es[i] > ce) | ((es[i] == ce) & (gs[i] < cg))
             ce = jnp.where(better, es[i], ce)
             cg = jnp.where(better, gs[i], cg)
+        n_alive = jax.lax.psum(n_alive, FLEET_AXIS)
 
-    # source pool: base models of the first min(L0, M_CAP) DCs, gathered by
-    # exact one-hot psum (x + 0 == x bitwise)
+    # source pool: base models of the first min(L0, M_CAP) *alive* DCs'
+    # slots, gathered by exact one-hot psum (x + 0 == x bitwise); the mask
+    # is the same one-hot reduced, so dead DCs' slots leave the pool (with
+    # nobody dead it reduces to exactly the old ``slot < min(l0, M_CAP)``)
     slot = jnp.arange(M_CAP, dtype=gid.dtype)
     oh = ((gid[:, None] == slot[None, :]) & (slot[None, :] < l0)
-          ).astype(jnp.float32)
+          & alive[:, None]).astype(jnp.float32)
     src = jnp.einsum("lm,lfc->mfc", oh, base)
-    src_mask = (slot < jnp.minimum(l0, M_CAP)).astype(jnp.float32)
+    src_mask = jnp.sum(oh, axis=0)
 
     # center's local dataset, same exact one-hot reduction
     coh = (gid == cg).astype(jnp.float32)
@@ -372,14 +409,17 @@ def _city_round(w, has_g, x, y, m, valid, gid, l0, eta, x_test, y_oh, *,
     cy = jnp.einsum("l,lk->k", coh, y.astype(jnp.float32))
     if shards > 1:
         src = jax.lax.psum(src, FLEET_AXIS)
+        src_mask = jax.lax.psum(src_mask, FLEET_AXIS)
         cx = jax.lax.psum(cx, FLEET_AXIS)
         cy = jax.lax.psum(cy, FLEET_AXIS)
 
     refined, _ = _greedytl(cx, cy.astype(jnp.int32), jnp.ones((K,)),
                            src, src_mask, num_classes=num_classes)
-    w2 = jnp.where(has_g, (1.0 - eta) * w + eta * refined, refined)
+    do = n_alive >= 2.0
+    upd = jnp.where(has_g, (1.0 - eta) * w + eta * refined, refined)
+    w2 = jnp.where(do, upd, w)
     cm = _window_cm(w2, x_test, y_oh, num_classes)
-    return w2, cm, cg
+    return w2, cm, cg, do
 
 
 def _draw_window(xtr, ytr, key, t, gid, validf, obs_per_dc: int):
@@ -406,19 +446,23 @@ def _city_program(W: int, L: int, K: int, shards: int, num_classes: int,
     mesh = fleet_mesh(shards)
     Lloc = L // shards
 
-    def mapped(xtr, ytr, x_test, y_oh, eta, l0, key):
+    def mapped(xtr, ytr, x_test, y_oh, eta, l0, key, t_die):
         shard = jax.lax.axis_index(FLEET_AXIS).astype(jnp.int32)
         gid = shard * Lloc + jnp.arange(Lloc, dtype=jnp.int32)
         valid = gid < l0
-        validf = valid.astype(jnp.float32)
+        # per-DC death window (churn; W everywhere = nobody ever dies, so
+        # alive == valid and every window computes its pre-churn values)
+        t_die_loc = jnp.take(t_die, gid)
 
         def body(carry, t):
             w, has_g = carry
-            x, y, m = _draw_window(xtr, ytr, key, t, gid, validf, K)
-            w2, cm, cg = _city_round(
-                w, has_g, x, y, m, valid, gid, l0, eta, x_test, y_oh,
+            alive = valid & (t < t_die_loc)
+            alivef = alive.astype(jnp.float32)
+            x, y, m = _draw_window(xtr, ytr, key, t, gid, alivef, K)
+            w2, cm, cg, do = _city_round(
+                w, has_g, x, y, m, alive, gid, l0, eta, x_test, y_oh,
                 num_classes=num_classes, iters=iters, shards=shards)
-            return (w2, has_g | True), (cm, cg)
+            return (w2, has_g | do), (cm, cg)
 
         F = xtr.shape[1]
         carry0 = (jnp.zeros((F + 1, num_classes), jnp.float32),
@@ -428,7 +472,7 @@ def _city_program(W: int, L: int, K: int, shards: int, num_classes: int,
         return cms, centers
 
     fn = shard_map(mapped, mesh=mesh,
-                   in_specs=(P(), P(), P(), P(), P(), P(), P()),
+                   in_specs=(P(), P(), P(), P(), P(), P(), P(), P()),
                    out_specs=(P(), P()), check_rep=False)
     return jax.jit(fn)
 
@@ -479,6 +523,33 @@ def _charge_city_learning(ledger: Ledger, tech: str, fleet_size: int,
         add(MODEL_BYTES, "m0 to center", [(1, ap, m1), (L - 2, m2, m1)])
 
 
+def _city_death_schedule(cfg, L0: int, L: int) -> np.ndarray:
+    """Per-DC death windows of the city churn model (DC ``i`` is alive for
+    windows ``t < t_die[i]``; ``windows`` everywhere = nobody ever dies).
+
+    Batteries are heterogeneous — ``battery_mj * (0.5 + U[0, 1))`` per DC
+    from a dedicated seeded stream, so depletion staggers instead of the
+    whole fleet dying at once — and drain per window is the analytic
+    per-DC share of the city charging model (collection rx + learning
+    total / L0), evaluated once up front. The schedule is therefore a
+    deterministic function of (seed, battery_mj, tech, fleet shape),
+    identical across shard counts by construction — the device side only
+    ever sees the precomputed ``t_die`` array."""
+    W = cfg.windows
+    t_die = np.full((L,), W, np.int32)
+    if cfg.battery_mj is None:
+        return t_die
+    from repro.core.energy import resolve_tech
+    drng = np.random.default_rng([int(cfg.seed), 0xC17B])
+    batt = cfg.battery_mj * (0.5 + drng.random(L0))
+    tmp = Ledger()
+    _charge_city_learning(tmp, cfg.tech, L0, center_is_ap=False)
+    e_w = (resolve_tech("802.15.4").rx_mj(cfg.obs_per_dc * OBS_BYTES)
+           + tmp.total() / L0)
+    t_die[:L0] = np.minimum(W, np.ceil(batt / e_w)).astype(np.int32)
+    return t_die
+
+
 def run_city(cfg, data: Dataset, *, max_shards: Optional[int] = None):
     """The city scenario: ``cfg.fleet_size`` DCs, ``cfg.obs_per_dc``
     observations each per window, StarHTL, one jitted dispatch for the
@@ -491,18 +562,25 @@ def run_city(cfg, data: Dataset, *, max_shards: Optional[int] = None):
     shards = dc_shards(L, max_shards)
     xtr, ytr = _train_arrays(data)
     x_test, y_oh = _eval_arrays(data)
+    t_die = _city_death_schedule(cfg, L0, L)
     program = _city_program(W, L, K, shards, NUM_CLASSES, cfg.train_iters)
     cms, centers = _dispatch_city(
         program, xtr, ytr, x_test, y_oh,
         jnp.float32(cfg.global_update_rate), jnp.int32(L0),
-        jax.random.PRNGKey(cfg.seed))
+        jax.random.PRNGKey(cfg.seed), jnp.asarray(t_die))
     cms, centers = np.asarray(cms), np.asarray(centers)
 
     ledger = Ledger()
     for t in range(W):
-        _charge_city_collection(ledger, L0, K)
-        _charge_city_learning(ledger, cfg.tech, L0,
-                              center_is_ap=(int(centers[t]) == 0))
+        alive = t < t_die[:L0]
+        n_alive = int(alive.sum())
+        if n_alive > 0:
+            _charge_city_collection(ledger, n_alive, K)
+        if n_alive >= 2:
+            # the analytic AP role falls to the lowest-gid alive DC
+            ap_gid = int(np.argmax(alive))
+            _charge_city_learning(ledger, cfg.tech, n_alive,
+                                  center_is_ap=(int(centers[t]) == ap_gid))
     return ScenarioResult(_f1_curve(cms, cfg.eval_every), ledger, cfg)
 
 
@@ -515,8 +593,8 @@ def run_city(cfg, data: Dataset, *, max_shards: Optional[int] = None):
 @lru_cache(maxsize=None)
 def _city_round_program(num_classes: int, iters: int):
     @jax.jit
-    def fn(w, has_g, x, y, m, valid, gid, l0, eta, x_test, y_oh):
-        return _city_round(w, has_g, x, y, m, valid, gid, l0, eta,
+    def fn(w, has_g, x, y, m, alive, gid, l0, eta, x_test, y_oh):
+        return _city_round(w, has_g, x, y, m, alive, gid, l0, eta,
                            x_test, y_oh, num_classes=num_classes,
                            iters=iters, shards=1)
     return fn
@@ -539,8 +617,7 @@ def run_city_perwindow(cfg, data: Dataset):
     x_test, y_oh = _eval_arrays(data)
     gid = jnp.arange(L, dtype=jnp.int32)
     valid_host = np.arange(L) < L0
-    m_host = np.broadcast_to(valid_host[:, None], (L, K)
-                             ).astype(np.float32).copy()
+    t_die = _city_death_schedule(cfg, L0, L)
     program = _city_round_program(NUM_CLASSES, cfg.train_iters)
 
     ledger = Ledger()
@@ -548,19 +625,27 @@ def run_city_perwindow(cfg, data: Dataset):
     has_g = False
     cms = np.zeros((W, NUM_CLASSES, NUM_CLASSES), np.float32)
     for t in range(W):
+        alive_host = valid_host & (t < t_die)
+        m_host = np.broadcast_to(alive_host[:, None], (L, K)
+                                 ).astype(np.float32).copy()
         idx = rng.integers(0, len(ytr_host), size=(L, K))
         xw = xtr_host[idx]                     # host gather, uploaded fresh
         yw = ytr_host[idx]
-        w_dev, cm, cg = program(jnp.asarray(w), jnp.asarray(has_g),
-                                jnp.asarray(xw), jnp.asarray(yw),
-                                jnp.asarray(m_host), jnp.asarray(valid_host),
-                                gid, jnp.int32(L0),
-                                jnp.float32(cfg.global_update_rate),
-                                x_test, y_oh)
+        w_dev, cm, cg, do = program(jnp.asarray(w), jnp.asarray(has_g),
+                                    jnp.asarray(xw), jnp.asarray(yw),
+                                    jnp.asarray(m_host),
+                                    jnp.asarray(alive_host),
+                                    gid, jnp.int32(L0),
+                                    jnp.float32(cfg.global_update_rate),
+                                    x_test, y_oh)
         w = np.asarray(w_dev)                  # per-window host sync
-        has_g = True
+        has_g = bool(has_g or bool(do))
         cms[t] = np.asarray(cm)
-        _charge_city_collection(ledger, L0, K)
-        _charge_city_learning(ledger, cfg.tech, L0,
-                              center_is_ap=(int(cg) == 0))
+        n_alive = int(alive_host.sum())
+        if n_alive > 0:
+            _charge_city_collection(ledger, n_alive, K)
+        if n_alive >= 2:
+            ap_gid = int(np.argmax(alive_host))
+            _charge_city_learning(ledger, cfg.tech, n_alive,
+                                  center_is_ap=(int(cg) == ap_gid))
     return ScenarioResult(_f1_curve(cms, cfg.eval_every), ledger, cfg)

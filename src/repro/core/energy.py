@@ -125,14 +125,33 @@ INDEX_BYTES = 8               # entropy index / center id messages
 @dataclass
 class Ledger:
     events: List[dict] = field(default_factory=list)
+    # Per-node battery meter (mJ drained so far), keyed by DC name. This is
+    # runtime-only feedback state for the churn model (DESIGN.md §13): it is
+    # excluded from equality and never serialized — the event list stays the
+    # only parity surface.
+    node_mj: Dict[str, float] = field(default_factory=dict, compare=False,
+                                      repr=False)
 
     def add(self, tech: str, nbytes: float, *, purpose: str,
-            n_tx: int = 1, n_rx: int = 1, what: str = "") -> float:
+            n_tx: int = 1, n_rx: int = 1, what: str = "",
+            src: str = None, dst: str = None) -> float:
+        """Record one transfer event. ``src``/``dst`` optionally name the
+        battery-powered endpoints: the tx side of the event is attributed
+        to ``src``'s battery meter and the rx side to ``dst``'s (relay
+        events — AP forwarding, mesh hops — are folded into the endpoints'
+        meters; the churn model cares about fleet membership, not per-hop
+        physics). Attribution never changes the event itself."""
         t = resolve_tech(tech)
-        mj = n_tx * t.tx_mj(nbytes) + n_rx * t.rx_mj(nbytes)
+        tx_mj = n_tx * t.tx_mj(nbytes)
+        rx_mj = n_rx * t.rx_mj(nbytes)
+        mj = tx_mj + rx_mj
         self.events.append({"tech": tech, "bytes": nbytes, "purpose": purpose,
                             "n_tx": n_tx, "n_rx": n_rx, "mj": mj,
                             "what": what})
+        if src is not None and tx_mj:
+            self.node_mj[src] = self.node_mj.get(src, 0.0) + tx_mj
+        if dst is not None and rx_mj:
+            self.node_mj[dst] = self.node_mj.get(dst, 0.0) + rx_mj
         return mj
 
     # -- high-level events ---------------------------------------------------
@@ -141,10 +160,20 @@ class Ledger:
         return self.add("nbiot", n_obs * OBS_BYTES, purpose="collection",
                         n_tx=1, n_rx=0, what="sensor->ES")
 
-    def collect_to_mule(self, n_obs: int) -> float:
-        """Sensor -> SmartMule over 802.15.4 (both endpoints on battery)."""
+    def collect_to_mule(self, n_obs: int, name: str = "SM") -> float:
+        """Sensor -> SmartMule over 802.15.4 (both endpoints on battery).
+        ``name`` identifies the receiving mule so the rx side lands on its
+        battery meter (the tx side is the sensor's, not a DC's)."""
         return self.add("802.15.4", n_obs * OBS_BYTES, purpose="collection",
-                        n_tx=1, n_rx=1, what="sensor->SM")
+                        n_tx=1, n_rx=1, what=f"sensor->{name}", dst=name)
+
+    def churn(self, name: str, window: int) -> None:
+        """Record a battery depletion: zero-energy bookkeeping event (the
+        node's radio goes silent — nothing is transferred), so churn shows
+        up in the serialized event stream exactly where it happened."""
+        self.events.append({"tech": "none", "bytes": 0.0, "purpose": "churn",
+                            "n_tx": 0, "n_rx": 0, "mj": 0.0,
+                            "what": f"{name} depleted@w{window}"})
 
     def unicast(self, tech: str, nbytes: float, *, src_is_es=False,
                 dst_is_es=False, src_is_ap=False, dst_is_ap=False,

@@ -564,6 +564,93 @@ def _city(fleet_size: int = 100_000, windows: int = 3, obs_per_dc: int = 4,
         label=f"city_{fleet_size}dc_{tech}").with_seeds(n_seeds)
 
 
+@register_preset("churn")
+def _churn(windows: int = 8, n_seeds: int = 1,
+           engine: str = "fleet") -> SweepSpec:
+    """DC churn (DESIGN.md §13): per-DC battery budgets fed back from the
+    energy ledger — mules that spend their budget leave the fleet
+    mid-scenario. One depleting battery axis x both HTL variants, plus a
+    no-battery control row per algorithm so the preset itself exhibits
+    the graceful-degradation curve."""
+    base = ScenarioConfig(windows=windows, eval_every=1, tech="4g",
+                          engine=engine)
+    return SweepSpec(
+        "churn", base=base,
+        axes={"algo": ("star", "a2a"),
+              "battery_mj": (None, 40.0, 15.0)},
+        label="churn_{algo}_batt{battery_mj}").with_seeds(n_seeds)
+
+
+@register_preset("drift")
+def _drift(windows: int = 10, n_seeds: int = 1,
+           engine: str = "fleet") -> SweepSpec:
+    """Concept drift (DESIGN.md §13): gradual covariate rotation, abrupt
+    label-prior shift, and their composition, against a drift-free
+    control — all on the same stream draw, so the F1 gap IS the drift
+    effect."""
+    base = ScenarioConfig(windows=windows, eval_every=1, algo="star",
+                          tech="4g", engine=engine)
+    return SweepSpec(
+        "drift", base=base,
+        axes={"drift": ("none", "rotate", "prior:at=0.5",
+                        "rotate_prior")},
+        label="drift_{drift}").with_seeds(n_seeds)
+
+
+@register_preset("byzantine")
+def _byzantine(windows: int = 8, n_seeds: int = 1,
+               engine: str = "fleet") -> SweepSpec:
+    """Faulty collectors vs robust aggregation (DESIGN.md §13): a fraction
+    of mule observations arrive mislabelled; the A2A combine either
+    averages (paper baseline) or trims the outer models (trimmed mean)."""
+    base = ScenarioConfig(windows=windows, eval_every=1, algo="a2a",
+                          tech="wifi", engine=engine)
+    return SweepSpec(
+        "byzantine", base=base,
+        axes={"byz_frac": (0.0, 0.25),
+              "robust_agg": ("mean", "trim:frac=0.25")},
+        label="byz{byz_frac}_{robust_agg}").with_seeds(n_seeds)
+
+
+@register_preset("mobility")
+def _mobility(windows: int = 8, n_seeds: int = 1, engine: str = "fleet",
+              trace_dir: str = "results/traces") -> SweepSpec:
+    """Mobility-trace collection (DESIGN.md §13): a random-waypoint trace
+    (generated on demand into ``trace_dir``, digest-named so regeneration
+    is idempotent) drives per-window per-mule loads through the
+    ``trace_file:`` collection policy, next to the paper's Zipf and the
+    synthetic ``trace:`` policy on the same scenario."""
+    from repro.data.mobility import generate_trace
+
+    path = generate_trace(trace_dir, windows=windows, mules=6,
+                          sensors=36, seed=0)
+    base = ScenarioConfig(windows=windows, eval_every=1, algo="star",
+                          tech="4g", engine=engine)
+    return SweepSpec(
+        "mobility", base=base,
+        axes={"collection": ("poisson_zipf", "trace:loads=60-25-15",
+                             f"trace_file:path={path}")},
+        label="mobility_{collection}").with_seeds(n_seeds)
+
+
+@register_preset("realism")
+def _realism(windows: int = 8, n_seeds: int = 2, engine: str = "fleet",
+             trace_dir: str = "results/traces") -> SweepSpec:
+    """The full realism matrix (DESIGN.md §13): churn x drift x byzantine
+    x mobility rows unioned into one seeded grid — the axis the paper's
+    static-fleet evaluation leaves out, runnable through every engine and
+    the sweep service like any other preset."""
+    return SweepSpec.union(
+        "realism",
+        _churn(windows=windows, n_seeds=0, engine=engine),
+        _drift(windows=windows + 2, n_seeds=0, engine=engine),
+        _byzantine(windows=windows, n_seeds=0, engine=engine),
+        _mobility(windows=windows, n_seeds=0, engine=engine,
+                  trace_dir=trace_dir),
+        seeds=range(n_seeds),
+    )
+
+
 @register_preset("smoke")
 def _smoke(windows: int = 6, n_seeds: int = 2,
            engine: str = "fleet") -> SweepSpec:

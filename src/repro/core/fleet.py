@@ -45,6 +45,7 @@ from repro.core import htl
 from repro.core.energy import INDEX_BYTES, Ledger, MODEL_BYTES
 from repro.core.greedytl import greedytl_fleet_stacked
 from repro.core.htl import DC, build_source_pool
+from repro.core.metrics import trimmed_mean
 from repro.core.svm import pad_fleet, sample_cap, train_svm_fleet
 from repro.core.topology import Topology, fleet_nodes
 
@@ -123,26 +124,32 @@ def refine_bucketed(dcs: Sequence[DC], srcs: Sequence[np.ndarray],
 def run_window_a2a(dcs: List[DC], prev_global: Optional[np.ndarray],
                    ledger: Ledger, tech: str, *, cap: int, num_classes: int,
                    n_subsample: Optional[int] = None,
-                   rng: Optional[np.random.Generator] = None) -> np.ndarray:
+                   rng: Optional[np.random.Generator] = None,
+                   robust: float = 0.0) -> np.ndarray:
     """One A2AHTL round (Algorithm 1), batched. Returns the new global
-    model. Drop-in replacement for :func:`repro.core.htl.run_window_a2a`."""
+    model. Drop-in replacement for :func:`repro.core.htl.run_window_a2a`
+    (``robust`` = the combine's trim fraction, 0.0 = plain mean)."""
     out = run_window_a2a_stacked([dcs], [prev_global], [ledger], [tech],
                                  cap=cap, num_classes=num_classes,
                                  n_subsamples=[n_subsample],
-                                 rngs=None if rng is None else [rng])
+                                 rngs=None if rng is None else [rng],
+                                 robusts=[robust])
     return out[0]
 
 
 def run_window_star(dcs: List[DC], prev_global: Optional[np.ndarray],
                     ledger: Ledger, tech: str, *, cap: int, num_classes: int,
                     n_subsample: Optional[int] = None,
-                    rng: Optional[np.random.Generator] = None) -> np.ndarray:
+                    rng: Optional[np.random.Generator] = None,
+                    robust: float = 0.0) -> np.ndarray:
     """One StarHTL round (Algorithm 2), batched base training. Drop-in
-    replacement for :func:`repro.core.htl.run_window_star`."""
+    replacement for :func:`repro.core.htl.run_window_star` (``robust``
+    accepted for interchangeability; StarHTL has no combine)."""
     out = run_window_star_stacked([dcs], [prev_global], [ledger], [tech],
                                   cap=cap, num_classes=num_classes,
                                   n_subsamples=[n_subsample],
-                                  rngs=None if rng is None else [rng])
+                                  rngs=None if rng is None else [rng],
+                                  robusts=[robust])
     return out[0]
 
 
@@ -188,19 +195,22 @@ def run_window_a2a_stacked(fleets: List[List[DC]],
                            ledgers: List[Ledger], techs: List[str], *,
                            cap: int, num_classes: int,
                            n_subsamples: Optional[List[Optional[int]]] = None,
-                           rngs: Optional[List[np.random.Generator]] = None
+                           rngs: Optional[List[np.random.Generator]] = None,
+                           robusts: Optional[List[float]] = None
                            ) -> List[Optional[np.ndarray]]:
     """One A2AHTL round for every replica — O(1) dispatches TOTAL.
 
     ``fleets[s]``/``ledgers[s]``/``techs[s]``/... belong to replica s; all
     host-side control flow (AP election, topology charging, early exits,
-    subsampling rng) is per replica, exactly as in the unstacked round, so
-    each replica's ledger and model trajectory match a sequential run.
-    Returns the new global model per replica.
+    subsampling rng, combine trim fraction ``robusts[s]``) is per replica,
+    exactly as in the unstacked round, so each replica's ledger and model
+    trajectory match a sequential run. Returns the new global model per
+    replica.
     """
     S = len(fleets)
     rngs = rngs or [np.random.default_rng(0) for _ in range(S)]
     n_subsamples = n_subsamples or [None] * S
+    robusts = robusts or [0.0] * S
     out: List[Optional[np.ndarray]] = list(prev_globals)
     multi = _base_and_singles(fleets, prev_globals, cap, num_classes, out)
     if not multi:
@@ -232,7 +242,7 @@ def run_window_a2a_stacked(fleets: List[List[DC]],
         center = next((d for d in dcs if d.name == ap), dcs[0])
         topos[i].gather(topos[i].node(center.name), MODEL_BYTES,
                         what="m1 gather")
-        out[s] = np.mean(r, axis=0)
+        out[s] = trimmed_mean(r, robusts[s])
     return out
 
 
@@ -242,13 +252,15 @@ def run_window_star_stacked(fleets: List[List[DC]],
                             cap: int, num_classes: int,
                             n_subsamples: Optional[List[Optional[int]]]
                             = None,
-                            rngs: Optional[List[np.random.Generator]] = None
+                            rngs: Optional[List[np.random.Generator]] = None,
+                            robusts: Optional[List[float]] = None
                             ) -> List[Optional[np.ndarray]]:
     """One StarHTL round for every replica — O(1) dispatches TOTAL.
 
     Center election and all message charging stay per replica; the
     per-replica GreedyTL "batch of one" calls stack into the flat DC axis
-    with per-replica source pools.
+    with per-replica source pools. ``robusts`` is accepted for signature
+    interchangeability with the A2A runner (StarHTL has no combine).
     """
     S = len(fleets)
     rngs = rngs or [np.random.default_rng(0) for _ in range(S)]

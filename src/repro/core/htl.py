@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.core.energy import INDEX_BYTES, Ledger, MODEL_BYTES, OBS_BYTES
 from repro.core.greedytl import greedytl
+from repro.core.metrics import trimmed_mean
 from repro.core.svm import pad_local, sample_cap, train_svm
 from repro.core.topology import Topology, fleet_nodes
 
@@ -140,8 +141,11 @@ def build_source_pool(base: List[np.ndarray],
 def run_window_a2a(dcs: List[DC], prev_global: Optional[np.ndarray],
                    ledger: Ledger, tech: str, *, cap: int, num_classes: int,
                    n_subsample: Optional[int] = None,
-                   rng: Optional[np.random.Generator] = None) -> np.ndarray:
-    """One A2AHTL round (Algorithm 1). Returns the new global model."""
+                   rng: Optional[np.random.Generator] = None,
+                   robust: float = 0.0) -> np.ndarray:
+    """One A2AHTL round (Algorithm 1). Returns the new global model.
+    ``robust`` is the combine step's trim fraction
+    (:func:`repro.core.metrics.trimmed_mean`; 0.0 = the paper's mean)."""
     rng = rng or np.random.default_rng(0)
     dcs = [d for d in dcs if d.n > 0]
     if not dcs:
@@ -168,15 +172,18 @@ def run_window_a2a(dcs: List[DC], prev_global: Optional[np.ndarray],
     center = next((d for d in dcs if d.name == ap), dcs[0])
     topo.gather(topo.node(center.name), MODEL_BYTES, what="m1 gather")
 
-    # Step 4: average
-    return np.mean(np.stack(refined), axis=0)
+    # Step 4: average (or trimmed mean, byzantine-robust combine)
+    return trimmed_mean(np.stack(refined), robust)
 
 
 def run_window_star(dcs: List[DC], prev_global: Optional[np.ndarray],
                     ledger: Ledger, tech: str, *, cap: int, num_classes: int,
                     n_subsample: Optional[int] = None,
-                    rng: Optional[np.random.Generator] = None) -> np.ndarray:
-    """One StarHTL round (Algorithm 2)."""
+                    rng: Optional[np.random.Generator] = None,
+                    robust: float = 0.0) -> np.ndarray:
+    """One StarHTL round (Algorithm 2). ``robust`` is accepted for engine
+    interchangeability but is a no-op: StarHTL has no multi-model combine
+    (the center's GreedyTL output IS the round's model)."""
     rng = rng or np.random.default_rng(0)
     dcs = [d for d in dcs if d.n > 0]
     if not dcs:

@@ -71,3 +71,26 @@ def f_measure_from_confusion(cm: np.ndarray) -> float:
     if p + r == 0:
         return 0.0
     return 2.0 * p * r / (p + r)
+
+
+# ---------------------------------------------------------------------------
+# Robust aggregation (DESIGN.md §13): coordinate-wise trimmed mean over the
+# leading axis — the all-to-all combine's defence against faulty/byzantine
+# DCs. With n contributions and trim fraction ``frac``, ``k = floor(frac*n)``
+# extremes are dropped per coordinate from each end; k == 0 degrades to the
+# plain mean bit-for-bit (same np.mean call), which is what keeps
+# ``robust_agg="mean"`` runs bitwise identical to pre-robust builds.
+# ---------------------------------------------------------------------------
+
+def trimmed_mean(stack: np.ndarray, frac: float, axis: int = 0) -> np.ndarray:
+    """Coordinate-wise ``frac``-trimmed mean along ``axis``."""
+    if not 0.0 <= frac < 0.5:
+        raise ValueError(f"trim fraction must be in [0, 0.5), got {frac}")
+    n = stack.shape[axis]
+    k = int(frac * n)
+    if k == 0:
+        return np.mean(stack, axis=axis)
+    s = np.sort(stack, axis=axis)
+    sl = [slice(None)] * s.ndim
+    sl[axis] = slice(k, n - k)
+    return np.mean(s[tuple(sl)], axis=axis)

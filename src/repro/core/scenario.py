@@ -126,6 +126,22 @@ class ScenarioConfig:
     # loop/fleet engines pin the paper's 200 — parity oracle); the city
     # preset trims it so 10^5-DC rounds fit the CI budget.
     train_iters: int = 200
+    # --- realism axis (DESIGN.md §13) ---
+    # Per-mule battery budget (mJ). When set, each mule's attributed drain
+    # (Ledger.node_mj) is swept at the top of every window and a depleted
+    # mule leaves the fleet for good (DC churn); None = infinite batteries.
+    # Host-side: churn only changes which DCs the host hands the engines.
+    battery_mj: Optional[float] = field(default=None, metadata=_host())
+    # Concept-drift schedule applied to the observation stream: a spec
+    # string over repro.data.synthetic_covtype.DRIFT_FACTORIES ("none",
+    # "rotate:rate=0.05", "prior:at=0.5,gamma=0.5", "rotate_prior").
+    drift: str = field(default="none", metadata=_host())
+    # Per-live-mule-per-window probability of a faulty (byzantine) upload:
+    # the mule's window labels arrive cyclically shifted by one class.
+    byz_frac: float = field(default=0.0, metadata=_host())
+    # Combine rule of the A2A refine step: "mean" (the paper's average)
+    # or "trim:frac=F" (coordinate-wise F-trimmed mean, byzantine-robust).
+    robust_agg: str = field(default="mean", metadata=_host())
 
 
 @dataclass
@@ -166,15 +182,18 @@ def _zipf_probs(n: int, alpha: float) -> np.ndarray:
 # collection-policy registry (mirrors the transport registry)
 # ---------------------------------------------------------------------------
 
-# A policy maps (cfg, rng, n_mule_obs) -> (L mules, per-observation mule
-# assignment in [0, L)); factories take the spec-string parameters.
-CollectionPolicy = Callable[["ScenarioConfig", np.random.Generator, int],
+# A policy maps (cfg, rng, n_mule_obs[, window]) -> (L mules,
+# per-observation mule assignment in [0, L)); factories take the
+# spec-string parameters. ``window`` is the 0-based window index — the
+# builtin stochastic policies ignore it (their dynamics live in the rng
+# stream), the trace-file policy uses it as its cursor.
+CollectionPolicy = Callable[["ScenarioConfig", np.random.Generator, int, int],
                             Tuple[int, np.ndarray]]
 
 
 def _poisson_zipf_policy() -> CollectionPolicy:
     """The paper's process: Poisson(lambda) mules, Zipf(alpha) allocation."""
-    def policy(cfg, rng, n):
+    def policy(cfg, rng, n, window=0):
         L = max(1, rng.poisson(cfg.lam_poisson))
         return L, rng.choice(L, size=n, p=_zipf_probs(L, cfg.zipf_alpha))
     return policy
@@ -182,10 +201,22 @@ def _poisson_zipf_policy() -> CollectionPolicy:
 
 def _uniform_policy() -> CollectionPolicy:
     """Scenario 3: Poisson(lambda) mules, uniform allocation."""
-    def policy(cfg, rng, n):
+    def policy(cfg, rng, n, window=0):
         L = max(1, rng.poisson(cfg.lam_poisson))
         return L, rng.integers(0, L, size=n)
     return policy
+
+
+def _apportion(shares: np.ndarray, n: int) -> Tuple[int, np.ndarray]:
+    """Largest-remainder apportionment of ``n`` observations over per-mule
+    ``shares`` — the deterministic allocation core shared by the ``trace``
+    and ``trace_file`` policies."""
+    L = len(shares)
+    quota = shares / shares.sum() * n
+    counts = np.floor(quota).astype(np.int64)
+    order = np.argsort(-(quota - counts))
+    counts[order[:n - counts.sum()]] += 1
+    return L, np.repeat(np.arange(L), counts)
 
 
 def _trace_policy(loads: str = "60-25-15") -> CollectionPolicy:
@@ -198,13 +229,28 @@ def _trace_policy(loads: str = "60-25-15") -> CollectionPolicy:
         raise ValueError(f"trace loads must be non-negative with a positive "
                          f"sum, got {loads!r}")
 
-    def policy(cfg, rng, n):
-        L = len(shares)
-        quota = shares / shares.sum() * n
-        counts = np.floor(quota).astype(np.int64)
-        order = np.argsort(-(quota - counts))
-        counts[order[:n - counts.sum()]] += 1
-        return L, np.repeat(np.arange(L), counts)
+    def policy(cfg, rng, n, window=0):
+        return _apportion(shares, n)
+    return policy
+
+
+def _trace_file_policy(path: str = "") -> CollectionPolicy:
+    """Windowed cursor over a mobility-trace *file*
+    (:mod:`repro.data.mobility`): window ``t`` apportions the mule share of
+    the window's observations over row ``t % windows`` of the trace's
+    ``(windows, mules)`` load matrix — the fleet moves window to window,
+    and a scenario longer than the trace wraps around. Mules with zero
+    load in a window simply collect nothing. Entirely rng-independent, so
+    every seed replica sees the same fleet trajectory."""
+    if not path:
+        raise ValueError(
+            "trace_file needs path=<trace json>; generate one with "
+            "repro.data.mobility.generate_trace")
+    from repro.data.mobility import load_trace
+    loads = load_trace(str(path))
+
+    def policy(cfg, rng, n, window=0):
+        return _apportion(loads[window % loads.shape[0]], n)
     return policy
 
 
@@ -216,7 +262,7 @@ def _bursty_policy(burst: float = 8.0) -> CollectionPolicy:
     if burst < 1.0:
         raise ValueError(f"burst length must be >= 1, got {burst}")
 
-    def policy(cfg, rng, n):
+    def policy(cfg, rng, n, window=0):
         L = max(1, rng.poisson(cfg.lam_poisson))
         p = _zipf_probs(L, cfg.zipf_alpha)
         assign = np.empty(n, np.int64)
@@ -233,6 +279,7 @@ COLLECTION_POLICIES: Dict[str, Callable[..., CollectionPolicy]] = {
     "poisson_zipf": _poisson_zipf_policy,
     "uniform": _uniform_policy,
     "trace": _trace_policy,
+    "trace_file": _trace_file_policy,
     "bursty": _bursty_policy,
 }
 
@@ -264,31 +311,125 @@ def _effective_collection(cfg: ScenarioConfig) -> str:
 
 
 # ---------------------------------------------------------------------------
+# realism axis: battery-driven churn, robust aggregation, drifted streams
+# (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+class ChurnBook:
+    """Per-replica churn state: one battery budget, and which mules have
+    already depleted it (name -> window of death). Depletion is swept at
+    the top of every window against the ledger's attributed per-node drain
+    (:attr:`~repro.core.energy.Ledger.node_mj`) in sorted-name order, so
+    every driver that replays the same windows (fleet engine, scan
+    planner, stacked replicas) kills the same mules at the same windows —
+    churn parity is by construction, not by coincidence. The ES is mains
+    powered and never churns."""
+
+    def __init__(self, battery_mj: float):
+        self.battery_mj = float(battery_mj)
+        self.dead: Dict[str, int] = {}
+
+    def sweep(self, ledger: Ledger, window: int) -> None:
+        """Retire every node whose attributed drain crossed the budget."""
+        for name in sorted(ledger.node_mj):
+            if name == "ES" or name in self.dead:
+                continue
+            if ledger.node_mj[name] >= self.battery_mj:
+                self.dead[name] = window
+                ledger.churn(name, window)
+
+
+def resolve_robust(spec: str) -> float:
+    """Trim fraction of a robust-aggregation spec: ``"mean"`` -> 0.0 (the
+    paper's plain average), ``"trim[:frac=F]"`` -> F (coordinate-wise
+    trimmed mean, default 0.2). Same fail-fast contract as the spec
+    registries: unknown names/parameters raise :class:`KeyError`, invalid
+    fractions :class:`ValueError`."""
+    from repro.core.registry import parse_spec
+    try:
+        name, params = parse_spec(spec)
+    except ValueError as e:
+        raise KeyError(str(e)) from e
+    if name == "mean":
+        if params:
+            raise KeyError(f"robust_agg 'mean' takes no parameters, "
+                           f"got {spec!r}")
+        return 0.0
+    if name == "trim":
+        frac = params.pop("frac", 0.2)
+        if params:
+            raise KeyError(f"unknown robust_agg parameters "
+                           f"{sorted(params)} in {spec!r}")
+        if isinstance(frac, bool) or not isinstance(frac, (int, float)) \
+                or not 0.0 <= float(frac) < 0.5:
+            raise ValueError(f"trim fraction must be in [0, 0.5), "
+                             f"got {frac!r}")
+        return float(frac)
+    raise KeyError(f"no robust aggregation registered for {spec!r}; "
+                   f"known: ['mean', 'trim']")
+
+
+def build_stream(cfg: ScenarioConfig, data: Dataset,
+                 rng: np.random.Generator
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """The scenario's observation stream: a seeded draw from the train
+    pool, then the configured concept-drift transform. Shared by every
+    driver (sequential, stacked, scan planner), so drifted streams are
+    identical across engines by construction. Consumes exactly one
+    ``rng.permutation`` — drift randomness lives in its own seeded
+    streams, so ``drift="none"`` configs replay bitwise as before."""
+    n_total = cfg.windows * cfg.obs_per_window
+    order = rng.permutation(len(data.y_train))[:n_total]
+    sx, sy = data.x_train[order], data.y_train[order]
+    if cfg.drift != "none":
+        from repro.data.synthetic_covtype import get_drift
+        sx, sy = get_drift(cfg.drift)(sx, sy, cfg.windows,
+                                      cfg.obs_per_window, cfg.seed)
+    return sx.astype(np.float32), sy.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
 # per-window phases
 # ---------------------------------------------------------------------------
 
 def collect_window(cfg: ScenarioConfig, rng: np.random.Generator,
-                   wx: np.ndarray, wy: np.ndarray, ledger: Ledger
+                   wx: np.ndarray, wy: np.ndarray, ledger: Ledger, *,
+                   window: int = 0, churn: Optional[ChurnBook] = None
                    ) -> List[DC]:
     """Collection phase: split the window's observations between the Edge
     Server (NB-IoT, fraction ``p_edge``) and a SmartMule fleet (802.15.4)
     whose size/allocation comes from the configured collection policy,
     charging every transfer. This is a pure dispatch point: the arrival
-    process itself lives in :data:`COLLECTION_POLICIES`."""
+    process itself lives in :data:`COLLECTION_POLICIES`.
+
+    The realism hooks are applied here, identically for every driver:
+    ``churn`` retires depleted mules *before* they collect (their
+    observations are lost — the radio is dark, nothing is charged), and a
+    ``byz_frac`` coin per live mule corrupts that mule's window labels
+    (cyclic class shift). Both consume host rng/state only when enabled,
+    so baseline configs replay bitwise."""
+    if churn is not None:
+        churn.sweep(ledger, window)
     n_edge = int(round(cfg.p_edge * cfg.obs_per_window))
     idx = rng.permutation(cfg.obs_per_window)
     edge_idx, mule_idx = idx[:n_edge], idx[n_edge:]
 
     policy = get_collection_policy(_effective_collection(cfg))
-    L, assign = policy(cfg, rng, len(mule_idx))
+    L, assign = policy(cfg, rng, len(mule_idx), window)
 
     dcs: List[DC] = []
     for m in range(L):
         sel = mule_idx[assign == m]
         if len(sel) == 0:
             continue
-        ledger.collect_to_mule(len(sel))
-        dcs.append(DC(f"SM{m + 1}", wx[sel], wy[sel]))
+        name = f"SM{m + 1}"
+        if churn is not None and name in churn.dead:
+            continue
+        wy_m = wy[sel]
+        if cfg.byz_frac > 0.0 and rng.random() < cfg.byz_frac:
+            wy_m = (wy_m + 1) % NUM_CLASSES
+        ledger.collect_to_mule(len(sel), name)
+        dcs.append(DC(name, wx[sel], wy_m))
     if n_edge > 0:
         ledger.collect_to_edge(n_edge)
         if cfg.include_es_in_learning:
@@ -300,12 +441,17 @@ def learning_round(cfg: ScenarioConfig, dcs: List[DC],
                    prev_global: Optional[np.ndarray], ledger: Ledger,
                    rng: np.random.Generator) -> Optional[np.ndarray]:
     """One HTL round on the configured engine (after the optional
-    data-aggregation heuristic, paper Section 6.3)."""
+    data-aggregation heuristic, paper Section 6.3). A window whose fleet
+    churned away entirely runs no round (``None``: the global model is
+    kept as-is — matching the scan engine's ``learn`` mask bitwise)."""
     if cfg.aggregate:
         dcs = apply_aggregation_heuristic(dcs, ledger, cfg.tech)
+    if not dcs:
+        return None
     run = ENGINES[cfg.engine][cfg.algo]
     return run(dcs, prev_global, ledger, cfg.tech, cap=cfg.cap,
-               num_classes=NUM_CLASSES, n_subsample=cfg.n_subsample, rng=rng)
+               num_classes=NUM_CLASSES, n_subsample=cfg.n_subsample, rng=rng,
+               robust=resolve_robust(cfg.robust_agg))
 
 
 def update_global(cfg: ScenarioConfig, prev: Optional[np.ndarray],
@@ -476,6 +622,27 @@ def validate_config(cfg: ScenarioConfig) -> None:
         get_transport(cfg.tech)      # relay structure ...
         resolve_tech(cfg.tech)       # ... and per-event energy, both layers
         get_collection_policy(_effective_collection(cfg))
+    # realism axis (DESIGN.md §13)
+    if cfg.battery_mj is not None and cfg.battery_mj <= 0:
+        raise ValueError(f"battery_mj must be positive (or None for "
+                         f"infinite batteries), got {cfg.battery_mj}")
+    if not 0.0 <= cfg.byz_frac <= 1.0:
+        raise ValueError(f"byz_frac must be in [0, 1], got {cfg.byz_frac}")
+    if cfg.algo == "edge_only" and (cfg.battery_mj is not None
+                                    or cfg.byz_frac > 0.0):
+        raise ValueError("churn/byzantine knobs model the mule fleet; "
+                         "algo='edge_only' has no mules")
+    if cfg.drift != "none":
+        from repro.data.synthetic_covtype import get_drift
+        get_drift(cfg.drift)         # KeyError/ValueError before any window
+    resolve_robust(cfg.robust_agg)
+    if cfg.fleet_size is not None and (cfg.drift != "none"
+                                       or cfg.byz_frac > 0.0
+                                       or cfg.robust_agg != "mean"):
+        raise ValueError(
+            "city mode draws observations on device and runs StarHTL "
+            "(no A2A combine): of the realism axis only battery churn "
+            "applies; drift/byz_frac/robust_agg must stay at defaults")
     n_edge = int(round(cfg.p_edge * cfg.obs_per_window))
     if (cfg.algo != "edge_only" and not cfg.include_es_in_learning
             and n_edge >= cfg.obs_per_window):
@@ -496,19 +663,18 @@ def run_scenario(cfg: ScenarioConfig, data: Dataset) -> ScenarioResult:
         return cityscan.run_scenario_scan(cfg, data)
     rng = np.random.default_rng(cfg.seed)
     ledger = Ledger()
-    n_total = cfg.windows * cfg.obs_per_window
-    order = rng.permutation(len(data.y_train))[:n_total]
-    stream_x = data.x_train[order].astype(np.float32)
-    stream_y = data.y_train[order].astype(np.int32)
+    stream_x, stream_y = build_stream(cfg, data, rng)
 
     if cfg.algo == "edge_only":
         return _run_edge_only(cfg, data, ledger, stream_x, stream_y)
 
+    churn = None if cfg.battery_mj is None else ChurnBook(cfg.battery_mj)
     f1_curve: List[float] = []
     prev_global: Optional[np.ndarray] = None
     for t in range(cfg.windows):
         s = slice(t * cfg.obs_per_window, (t + 1) * cfg.obs_per_window)
-        dcs = collect_window(cfg, rng, stream_x[s], stream_y[s], ledger)
+        dcs = collect_window(cfg, rng, stream_x[s], stream_y[s], ledger,
+                             window=t, churn=churn)
         new_global = learning_round(cfg, dcs, prev_global, ledger, rng)
         prev_global = update_global(cfg, prev_global, new_global)
         if (t + 1) % cfg.eval_every == 0:
@@ -598,12 +764,10 @@ def run_scenarios_stacked(cfgs: Sequence[ScenarioConfig], data: Dataset
     ledgers = [Ledger() for _ in cfgs]
     techs = [c.tech for c in cfgs]
     n_subsamples = [c.n_subsample for c in cfgs]
-    n_total = cfg0.windows * cfg0.obs_per_window
-    streams = []
-    for rng in rngs:
-        order = rng.permutation(len(data.y_train))[:n_total]
-        streams.append((data.x_train[order].astype(np.float32),
-                        data.y_train[order].astype(np.int32)))
+    robusts = [resolve_robust(c.robust_agg) for c in cfgs]
+    churns = [None if c.battery_mj is None else ChurnBook(c.battery_mj)
+              for c in cfgs]
+    streams = [build_stream(c, data, rng) for c, rng in zip(cfgs, rngs)]
 
     curves: List[List[float]] = [[] for _ in cfgs]
     prevs: List[Optional[np.ndarray]] = [None] * S
@@ -612,14 +776,21 @@ def run_scenarios_stacked(cfgs: Sequence[ScenarioConfig], data: Dataset
         fleets = []
         for s in range(S):
             dcs = collect_window(cfgs[s], rngs[s], streams[s][0][sl],
-                                 streams[s][1][sl], ledgers[s])
+                                 streams[s][1][sl], ledgers[s],
+                                 window=t, churn=churns[s])
             if cfgs[s].aggregate:
                 dcs = apply_aggregation_heuristic(dcs, ledgers[s], techs[s])
             fleets.append(dcs)
         news = run_stacked(fleets, prevs, ledgers, techs, cap=cfg0.cap,
                            num_classes=NUM_CLASSES,
-                           n_subsamples=n_subsamples, rngs=rngs)
-        prevs = [update_global(cfgs[s], prevs[s], news[s]) for s in range(S)]
+                           n_subsamples=n_subsamples, rngs=rngs,
+                           robusts=robusts)
+        # a replica whose fleet churned away keeps its model as-is (the
+        # sequential driver skips the round; EMA-ing prev with itself is
+        # NOT a bitwise no-op, so the skip must match exactly)
+        prevs = [prevs[s] if not fleets[s]
+                 else update_global(cfgs[s], prevs[s], news[s])
+                 for s in range(S)]
         if (t + 1) % cfg0.eval_every == 0:
             for s in range(S):
                 curves[s].append(_eval(prevs[s], data))

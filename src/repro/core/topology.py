@@ -181,7 +181,8 @@ class Topology:
                 purpose: str = "learning", what: str = "model") -> float:
         n_tx, n_rx = self.transport.counts(src, dst)
         return self.ledger.add(self.tech, nbytes, purpose=purpose,
-                               n_tx=n_tx, n_rx=n_rx, what=what)
+                               n_tx=n_tx, n_rx=n_rx, what=what,
+                               src=src.name, dst=dst.name)
 
     def broadcast(self, src: Node, nbytes: float, *,
                   purpose: str = "learning", what: str = "model") -> float:

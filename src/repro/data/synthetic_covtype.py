@@ -12,7 +12,7 @@ categorical features carry class-skewed (but noisy) distributions.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import Callable, Dict, NamedTuple, Tuple
 
 import numpy as np
 
@@ -70,6 +70,118 @@ def make_covtype_like(n_total: int = 19229, seed: int = 0,
 
     n_test = int(n_total * test_frac)
     return Dataset(x[n_test:], y[n_test:], x[:n_test], y[:n_test])
+
+
+# ---------------------------------------------------------------------------
+# Concept drift (DESIGN.md §13). A drift transform rewrites the *stream* a
+# scenario draws — never the train/test pools — as a pure function of
+# (stream, windows, obs_per_window, seed), so every engine that builds the
+# same stream sees the same drifted stream (fleet/scan/city parity by
+# construction). Drift randomness comes from its own `default_rng([seed,
+# const])` streams: the scenario's main rng is never consumed, so
+# `drift="none"` configs remain bitwise identical to pre-drift builds.
+#
+# Two paper-motivated schedules, addressable by spec string (grammar in
+# repro.core.registry, like transports/collection policies):
+#
+# * ``rotate[:rate=R]`` — gradual covariate drift: the standardized
+#   continuous block rotates in a fixed random 2-plane by angle ``R * t`` at
+#   window ``t`` (norms preserved; the one-hot blocks are untouched, keeping
+#   them valid one-hots).
+# * ``prior[:at=A,gamma=G]`` — abrupt label-prior shift: from window
+#   ``floor(A * windows)`` on, the stream is resampled (with replacement,
+#   from the same drawn stream segment) under class weights ``G ** y`` —
+#   G < 1 tilts the prior towards low class ids.
+# * ``rotate_prior[:rate=,at=,gamma=]`` — both, rotation applied first.
+# ---------------------------------------------------------------------------
+
+DriftFn = Callable[[np.ndarray, np.ndarray, int, int, int],
+                   Tuple[np.ndarray, np.ndarray]]
+
+
+def _rotate_drift(rate: float = 0.05) -> DriftFn:
+    if not 0.0 <= rate <= np.pi:
+        raise ValueError(f"rotation rate must be in [0, pi] rad/window, "
+                         f"got {rate}")
+
+    def drift(x, y, windows, obs_per_window, seed):
+        drng = np.random.default_rng([int(seed), 0xD21F7])
+        u = drng.normal(size=NUM_CONTINUOUS)
+        u /= np.linalg.norm(u)
+        v = drng.normal(size=NUM_CONTINUOUS)
+        v -= u * (u @ v)
+        v /= np.linalg.norm(v)
+        x = np.array(x, np.float64, copy=True)
+        block = x[:, :NUM_CONTINUOUS]
+        a, b = block @ u, block @ v
+        t = np.repeat(np.arange(windows, dtype=np.float64),
+                      obs_per_window)[:len(x)]
+        cos, sin = np.cos(rate * t), np.sin(rate * t)
+        block += ((a * (cos - 1.0) - b * sin)[:, None] * u
+                  + (a * sin + b * (cos - 1.0))[:, None] * v)
+        x[:, :NUM_CONTINUOUS] = block
+        return x, y
+    return drift
+
+
+def _prior_drift(at: float = 0.5, gamma: float = 0.5) -> DriftFn:
+    if not 0.0 <= at <= 1.0:
+        raise ValueError(f"prior-shift onset must be in [0, 1], got {at}")
+    if not gamma > 0.0:
+        raise ValueError(f"prior-shift gamma must be positive, got {gamma}")
+
+    def drift(x, y, windows, obs_per_window, seed):
+        cut = int(at * windows) * obs_per_window
+        if cut >= len(x) or gamma == 1.0:
+            return x, y
+        drng = np.random.default_rng([int(seed), 0xD21F8])
+        w = gamma ** np.asarray(y[cut:], np.float64)
+        idx = cut + drng.choice(len(x) - cut, size=len(x) - cut,
+                                replace=True, p=w / w.sum())
+        x = np.concatenate([x[:cut], x[idx]])
+        y = np.concatenate([y[:cut], y[idx]])
+        return x, y
+    return drift
+
+
+def _rotate_prior_drift(rate: float = 0.05, at: float = 0.5,
+                        gamma: float = 0.5) -> DriftFn:
+    rot, pri = _rotate_drift(rate), _prior_drift(at, gamma)
+
+    def drift(x, y, windows, obs_per_window, seed):
+        x, y = rot(x, y, windows, obs_per_window, seed)
+        return pri(x, y, windows, obs_per_window, seed)
+    return drift
+
+
+def _no_drift() -> DriftFn:
+    return lambda x, y, windows, obs_per_window, seed: (x, y)
+
+
+DRIFT_FACTORIES: Dict[str, Callable[..., DriftFn]] = {
+    "none": _no_drift,
+    "rotate": _rotate_drift,
+    "prior": _prior_drift,
+    "rotate_prior": _rotate_prior_drift,
+}
+
+_DRIFT_CACHE: Dict[str, DriftFn] = {}
+
+
+def register_drift(name: str, factory: Callable[..., DriftFn]) -> None:
+    """Register a drift-schedule factory under a spec name."""
+    # lazy import: repro.core.__init__ imports back into this module
+    from repro.core.registry import register_factory
+    register_factory(DRIFT_FACTORIES, name, factory, "drift schedule")
+
+
+def get_drift(spec: str) -> DriftFn:
+    """Resolve a drift spec string to a (cached) drift transform.
+    Raises :class:`KeyError` on unknown names/parameters, so
+    ``validate_config`` keeps its fail-fast contract."""
+    from repro.core.registry import resolve_spec
+    return resolve_spec(spec, DRIFT_FACTORIES, _DRIFT_CACHE,
+                        "drift schedule")
 
 
 def observation_bytes(label_bytes: int = 1, feature_bytes: int = 8) -> int:

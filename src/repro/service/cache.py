@@ -31,7 +31,9 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import tempfile
 import threading
+from collections import OrderedDict
 from typing import Any, Dict, Mapping, Optional
 
 from repro.service.statsd import statsd
@@ -65,7 +67,10 @@ def cache_key(spec_hash: str, data_digest: str, stack: str) -> str:
 class ResultCache:
     """Byte-exact result store: ``put`` the merged ``SweepResult`` JSON
     text, ``get`` it back verbatim. Thread-safe (the service's job threads
-    store while request handlers look up)."""
+    store while request handlers look up). Memory entries are true-LRU
+    (a hit refreshes recency, so the hottest key is the last evicted);
+    hit telemetry distinguishes memory hits (``service.cache.hit``) from
+    disk-warmed hits (``service.cache.hit_disk``)."""
 
     def __init__(self, directory: Optional[str] = None,
                  max_entries: int = 256):
@@ -73,8 +78,7 @@ class ResultCache:
             raise ValueError(f"max_entries must be >= 1, got {max_entries}")
         self.directory = directory
         self.max_entries = max_entries
-        self._mem: Dict[str, str] = {}
-        self._order: list = []          # insertion-ordered keys (LRU-ish)
+        self._mem: "OrderedDict[str, str]" = OrderedDict()
         self._lock = threading.Lock()
         if directory:
             os.makedirs(directory, exist_ok=True)
@@ -89,7 +93,12 @@ class ResultCache:
     def get(self, key: str) -> Optional[str]:
         with self._lock:
             text = self._mem.get(key)
-        if text is None and self.directory:
+            if text is not None:
+                self._mem.move_to_end(key)      # true LRU: hits refresh
+        if text is not None:
+            statsd.increment("service.cache.hit")
+            return text
+        if self.directory:
             try:
                 with open(self._path(key)) as f:
                     text = f.read()
@@ -98,27 +107,38 @@ class ResultCache:
             if text is not None:
                 with self._lock:
                     self._remember(key, text)
-        statsd.increment("service.cache.hit" if text is not None
-                         else "service.cache.miss")
-        return text
+                statsd.increment("service.cache.hit_disk")
+                return text
+        statsd.increment("service.cache.miss")
+        return None
 
     def put(self, key: str, text: str) -> None:
         with self._lock:
             self._remember(key, text)
         if self.directory:
-            tmp = self._path(key) + ".tmp"
-            with open(tmp, "w") as f:
-                f.write(text)
-            os.replace(tmp, self._path(key))    # readers never see partials
+            # unique temp per writer: concurrent puts of the SAME key must
+            # not share a temp path, or interleaved truncate/write/rename
+            # can publish a partially-written file — each writer stages its
+            # own file and the atomic rename decides the winner
+            fd, tmp = tempfile.mkstemp(dir=self.directory,
+                                       prefix=f".{key}.", suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    f.write(text)
+                os.replace(tmp, self._path(key))  # readers never see partials
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
         statsd.increment("service.cache.store")
 
     def _remember(self, key: str, text: str) -> None:
-        if key not in self._mem:
-            self._order.append(key)
         self._mem[key] = text
-        while len(self._order) > self.max_entries:
-            evicted = self._order.pop(0)
-            self._mem.pop(evicted, None)
+        self._mem.move_to_end(key)
+        while len(self._mem) > self.max_entries:
+            self._mem.popitem(last=False)
 
     def stats(self) -> Dict[str, Any]:
         with self._lock:

@@ -115,8 +115,12 @@ class ServiceClient:
     def status(self, job: str) -> Dict[str, Any]:
         return self._request("GET", f"/v1/jobs/{job}")
 
-    def cancel(self, job: str) -> Dict[str, Any]:
-        return self._request("POST", f"/v1/jobs/{job}/cancel", {})
+    def cancel(self, job: str, cancel_token: str) -> Dict[str, Any]:
+        """Cancel a job. ``cancel_token`` is the capability the submit
+        reply returned — the server 403s any other value, so holding a
+        job id alone does not grant cancellation."""
+        return self._request("POST", f"/v1/jobs/{job}/cancel",
+                             {"cancel_token": cancel_token})
 
     def metrics(self) -> Dict[str, Any]:
         return self._request("GET", "/v1/metrics")

@@ -29,8 +29,11 @@ Wire protocol (DESIGN.md §12 has the full catalogue):
 * ``GET /v1/jobs/<id>/results`` — the merged ``SweepResult`` JSON,
   **verbatim bytes** (the parity surface); ``?page=N&per_page=M`` pages
   large results via :meth:`SweepResult.page`.
-* ``POST /v1/jobs/<id>/cancel`` — sets the job's stop event; no new
-  shard attempt starts (:meth:`HostsExecutor.execute_with_meta`).
+* ``POST /v1/jobs/<id>/cancel`` — body ``{"cancel_token": ...}`` with
+  the token the submit reply returned; sets the job's stop event so no
+  new shard attempt starts (:meth:`HostsExecutor.execute_with_meta`).
+  A missing or wrong token is a 403: only the submitter (or whoever it
+  shares the token with) can cancel a job.
 * ``GET /v1/metrics`` — the statsd snapshot + cache stats;
   ``GET /v1/healthz`` — liveness + queue depth.
 
@@ -47,6 +50,7 @@ direction.
 from __future__ import annotations
 
 import json
+import secrets
 import threading
 import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
@@ -96,6 +100,9 @@ class Job:
         self.backend = backend
         self.state = "queued"   # queued|running|done|failed|cancelled
         self.cached = False
+        # capability token: returned once in the submit reply, required
+        # by /cancel — never exposed via status()/metrics
+        self.cancel_token = secrets.token_hex(16)
         self.events: List[Dict[str, Any]] = []
         self.cond = threading.Condition()
         self.stop = threading.Event()
@@ -264,7 +271,8 @@ class SweepService:
         return {"schema": SERVICE_SCHEMA, "job": job.id,
                 "cached": job.cached, "name": spec.name,
                 "n_runs": len(runs), "n_shards": len(shards),
-                "shards": job.shards, "key": key}
+                "shards": job.shards, "key": key,
+                "cancel_token": job.cancel_token}
 
     def _update_gauges(self) -> None:
         with self._lock:
@@ -340,8 +348,17 @@ class SweepService:
             raise ServiceError(404, f"no job {job_id!r}")
         return job
 
-    def cancel(self, job_id: str) -> Dict[str, Any]:
+    def cancel(self, job_id: str,
+               cancel_token: Optional[str] = None) -> Dict[str, Any]:
         job = self.job(job_id)
+        # constant-time compare; missing/non-string tokens fail the same
+        # way as wrong ones, so a 403 leaks nothing about the token
+        if not (isinstance(cancel_token, str)
+                and secrets.compare_digest(cancel_token,
+                                           job.cancel_token)):
+            statsd.increment("service.cancel.denied")
+            raise ServiceError(403, f"cancel of {job_id} requires the "
+                                    f"cancel_token from its submit reply")
         job.stop.set()
         if job.state == "queued":
             # not yet picked up: the runner thread will fail fast on the
@@ -442,7 +459,19 @@ class _Handler(BaseHTTPRequestHandler):
                         self.service.submit(self._body_json()))
             if len(parts) == 4 and parts[:2] == ["v1", "jobs"] \
                     and parts[3] == "cancel":
-                return self._send_json(self.service.cancel(parts[2]))
+                # lenient parse: an empty/malformed body means "no
+                # token", which the service turns into a 403 (not a 400
+                # — authorization, not framing, is what's missing)
+                length = int(self.headers.get("Content-Length") or 0)
+                try:
+                    body = json.loads(self.rfile.read(length)) \
+                        if length > 0 else {}
+                except json.JSONDecodeError:
+                    body = {}
+                token = body.get("cancel_token") \
+                    if isinstance(body, dict) else None
+                return self._send_json(
+                    self.service.cancel(parts[2], token))
             raise ServiceError(404, f"no POST route {path!r}")
         except ServiceError as e:
             return self._send_json({"error": e.detail}, status=e.status)

@@ -246,7 +246,8 @@ def test_host_side_metadata_drives_stack_key():
     hs = set(host_side_fields())
     assert {"seed", "tech", "p_edge", "uniform", "aggregate", "n_subsample",
             "zipf_alpha", "lam_poisson", "global_update_rate",
-            "include_es_in_learning", "collection"} == hs
+            "include_es_in_learning", "collection",
+            "battery_mj", "drift", "byz_frac", "robust_agg"} == hs
     defaults = ScenarioConfig()
     for name in hs:
         varied = dataclasses.replace(
@@ -268,6 +269,10 @@ def _varied_value(name, default):
         return "mesh:hops=2"
     if name == "collection":
         return "bursty:burst=4"
+    if name == "drift":
+        return "rotate"
+    if name == "robust_agg":
+        return "trim:frac=0.25"
     if isinstance(default, bool):
         return not default
     if default is None:

@@ -1,0 +1,309 @@
+"""Realism axis (DESIGN.md §13): DC churn from energy-ledger battery
+feedback, concept drift in the covtype stream, mobility-trace collection,
+and byzantine collectors with robust aggregation.
+
+The hard promises under test:
+
+* every realism knob is **engine-invariant**: fleet vs scan produce
+  bitwise-identical F1 curves AND ledgers for churn/drift/trace-file/
+  byzantine configs (the scan engine host-replays collection + churn, so
+  nothing may diverge);
+* realism configs stack and shard like any other config (all new fields
+  are ``host_side``), bitwise across stack modes and shard counts, and
+  through the streaming sweep service;
+* baselines stay baselines: ``drift="none"``, ``robust_agg="mean"``,
+  ``battery_mj=None`` and ``byz_frac=0.0`` are bitwise no-ops (the
+  golden suite pins this globally; here we pin the mechanisms).
+"""
+import dataclasses
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.energy import Ledger
+from repro.core.experiment import SweepSpec, get_preset
+from repro.core.metrics import trimmed_mean
+from repro.core.scenario import (ChurnBook, ScenarioConfig,
+                                 get_collection_policy, host_side_fields,
+                                 resolve_robust, run_scenario,
+                                 validate_config)
+from repro.data.mobility import (generate_trace, load_trace,
+                                 make_trace_loads)
+from repro.data.synthetic_covtype import get_drift, make_covtype_like
+
+DATA = make_covtype_like(n_total=1400, seed=0)
+W = 4
+
+
+def _run(engine, **kw):
+    cfg = ScenarioConfig(windows=W, eval_every=1, engine=engine, **kw)
+    validate_config(cfg)
+    return run_scenario(cfg, DATA)
+
+
+# ---------------------------------------------------------------------------
+# trimmed mean (the robust combine primitive)
+# ---------------------------------------------------------------------------
+
+def test_trimmed_mean_zero_frac_is_plain_mean_bitwise():
+    rng = np.random.default_rng(0)
+    stack = rng.normal(size=(6, 5, 3)).astype(np.float32)
+    assert np.array_equal(trimmed_mean(stack, 0.0), np.mean(stack, axis=0))
+
+
+def test_trimmed_mean_drops_the_tails():
+    stack = np.array([[0.0], [1.0], [2.0], [3.0], [100.0]])
+    assert trimmed_mean(stack, 0.2)[0] == 2.0       # drops 0 and 100
+    assert trimmed_mean(stack, 0.1)[0] == np.mean(stack)  # k=0: plain mean
+    for bad in (-0.1, 0.5, 0.9):
+        with pytest.raises(ValueError):
+            trimmed_mean(stack, bad)
+
+
+def test_resolve_robust_spec_grammar():
+    assert resolve_robust("mean") == 0.0
+    assert resolve_robust("trim") == 0.2
+    assert resolve_robust("trim:frac=0.25") == 0.25
+    with pytest.raises(KeyError):
+        resolve_robust("median")
+    with pytest.raises(ValueError):
+        resolve_robust("trim:frac=0.5")
+
+
+# ---------------------------------------------------------------------------
+# mobility traces: generator, loader, trace_file policy
+# ---------------------------------------------------------------------------
+
+def test_trace_generator_deterministic_and_idempotent(tmp_path):
+    loads = make_trace_loads(windows=5, mules=3, sensors=20, seed=7)
+    assert loads.shape == (5, 3)
+    assert np.array_equal(loads,
+                          make_trace_loads(windows=5, mules=3,
+                                           sensors=20, seed=7))
+    assert (loads.sum(axis=1) == 20).all()     # every sensor lands somewhere
+    p1 = generate_trace(str(tmp_path), windows=5, mules=3, sensors=20,
+                        seed=7)
+    p2 = generate_trace(str(tmp_path), windows=5, mules=3, sensors=20,
+                        seed=7)
+    assert p1 == p2                            # digest-named, idempotent
+    assert np.array_equal(load_trace(p1), loads.astype(np.float64))
+    p3 = generate_trace(str(tmp_path), windows=5, mules=3, sensors=20,
+                        seed=8)
+    assert p3 != p1                            # seed lands in the digest
+
+
+def test_load_trace_validates(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"schema": 1, "windows": 2, "mules": 2,
+                               "loads": [[0, 0], [1, 1]]}))
+    with pytest.raises(ValueError, match="zero total load"):
+        load_trace(str(bad))                   # a window with zero load
+    bad.write_text(json.dumps({"schema": 99}))
+    with pytest.raises(ValueError):
+        load_trace(str(bad))
+
+
+def test_trace_file_policy_windowed_cursor_wraps(tmp_path):
+    path = generate_trace(str(tmp_path), windows=3, mules=3, sensors=30,
+                          seed=1)
+    policy = get_collection_policy(f"trace_file:path={path}")
+    cfg = ScenarioConfig(windows=6)
+    rng = np.random.default_rng(0)
+    ref = [policy(cfg, rng, 50, w) for w in range(3)]
+    for w in range(3):
+        # cursor wraps: window w+3 replays window w's loads exactly
+        L, assign = policy(cfg, rng, 50, w + 3)
+        assert L == ref[w][0]
+        assert np.array_equal(assign, ref[w][1])
+        assert len(assign) == 50               # every observation assigned
+        assert set(assign) <= set(range(L))
+    with pytest.raises(ValueError, match="path"):
+        get_collection_policy("trace_file")
+
+
+# ---------------------------------------------------------------------------
+# churn: battery feedback, graceful degradation
+# ---------------------------------------------------------------------------
+
+def test_churn_depletes_mules_and_degrades_gracefully():
+    base = _run("fleet", algo="star", tech="4g", seed=0)
+    churned = _run("fleet", algo="star", tech="4g", seed=0,
+                   battery_mj=25.0)
+    churn_events = [e for e in churned.ledger.events
+                    if e["purpose"] == "churn"]
+    assert churn_events, "battery 25 mJ over 4 windows must deplete mules"
+    assert all(e["mj"] == 0.0 for e in churn_events)
+    # a depleted mule stops accruing collection energy from its window on
+    first = churn_events[0]
+    name = first["what"].split()[0]
+    died_at = int(first["what"].rsplit("@w", 1)[1])
+    windows_seen = 0
+    for e in churned.ledger.events:
+        if e["what"] == f"sensor->{name}":
+            windows_seen += 1
+    assert windows_seen <= died_at
+    # graceful: finite F1, strictly cheaper than the un-churned baseline
+    assert all(np.isfinite(v) for v in churned.f1_curve)
+    assert churned.energy_total < base.energy_total
+    # no battery => bitwise baseline
+    again = _run("fleet", algo="star", tech="4g", seed=0)
+    assert again.f1_curve == base.f1_curve
+    assert again.ledger.events == base.ledger.events
+
+
+def test_churnbook_sweeps_deterministically_and_spares_the_es():
+    led = Ledger()
+    led.node_mj.update({"SM2": 9.0, "SM1": 11.0, "ES": 999.0})
+    book = ChurnBook(10.0)
+    book.sweep(led, 3)
+    assert book.dead == {"SM1": 3}             # ES never churns
+    assert led.events[-1]["purpose"] == "churn"
+    book.sweep(led, 4)                         # already dead: no re-churn
+    assert [e for e in led.events if e["purpose"] == "churn"] \
+        == [led.events[-1]]
+
+
+# ---------------------------------------------------------------------------
+# drift: schedule semantics
+# ---------------------------------------------------------------------------
+
+def test_drift_transforms_are_deterministic_and_scoped():
+    x = np.random.default_rng(0).normal(size=(60, 54))
+    y = np.random.default_rng(1).integers(0, 7, size=60).astype(np.int32)
+    rot = get_drift("rotate:rate=0.3")
+    x1, y1 = rot(x, y, 6, 10, seed=0)
+    x2, y2 = rot(x, y, 6, 10, seed=0)
+    assert np.array_equal(x1, x2) and np.array_equal(y1, y2)
+    # rotation touches only the continuous block, labels untouched
+    assert np.array_equal(x1[:, 10:], x[:, 10:])
+    assert np.array_equal(y1, y)
+    # window 0 is undrifted (angle 0); later windows move
+    assert np.allclose(x1[:10], x[:10])
+    assert not np.allclose(x1[-10:], x[-10:])
+    # norms preserved (it IS a rotation)
+    assert np.allclose(np.linalg.norm(x1[:, :10], axis=1),
+                       np.linalg.norm(x[:, :10], axis=1))
+
+    pri = get_drift("prior:at=0.5,gamma=0.2")
+    _, yp = pri(x, y, 6, 10, seed=0)
+    assert np.array_equal(yp[:30], y[:30])     # pre-onset untouched
+    # gamma < 1 tilts the post-onset prior towards low class ids
+    assert yp[30:].mean() < y[30:].mean() + 1e-9
+    with pytest.raises(KeyError):
+        get_drift("melt")
+    with pytest.raises(ValueError):
+        get_drift("rotate:rate=9.9")
+
+
+def test_drift_none_is_bitwise_baseline():
+    a = _run("fleet", algo="star", tech="4g", seed=1)
+    b = _run("fleet", algo="star", tech="4g", seed=1, drift="none")
+    assert a.f1_curve == b.f1_curve and a.ledger.events == b.ledger.events
+    c = _run("fleet", algo="star", tech="4g", seed=1, drift="rotate:rate=0.4")
+    assert c.f1_curve != a.f1_curve            # drift actually bites
+    assert c.ledger.events == a.ledger.events  # ...but costs no energy
+
+
+# ---------------------------------------------------------------------------
+# engine parity: fleet == scan, bitwise, for every realism knob
+# ---------------------------------------------------------------------------
+
+REALISM_CFGS = [
+    dict(algo="star", tech="4g", seed=0, battery_mj=25.0),
+    dict(algo="a2a", tech="wifi", seed=1, battery_mj=30.0),
+    dict(algo="star", tech="4g", seed=2, drift="rotate_prior"),
+    dict(algo="a2a", tech="wifi", seed=3, byz_frac=0.3,
+         robust_agg="trim:frac=0.25"),
+]
+
+
+@pytest.mark.parametrize("kw", REALISM_CFGS,
+                         ids=lambda k: "_".join(f"{a}" for a in k.values()))
+def test_scan_matches_fleet_on_realism_configs(kw):
+    ref = _run("fleet", **kw)
+    got = _run("scan", **kw)
+    assert got.ledger.events == ref.ledger.events
+    assert got.f1_curve == ref.f1_curve
+
+
+def test_scan_matches_fleet_on_trace_file(tmp_path):
+    path = generate_trace(str(tmp_path), windows=W, mules=4, sensors=30,
+                          seed=0)
+    kw = dict(algo="star", tech="4g", seed=0,
+              collection=f"trace_file:path={path}")
+    ref = _run("fleet", **kw)
+    got = _run("scan", **kw)
+    assert got.ledger.events == ref.ledger.events
+    assert got.f1_curve == ref.f1_curve
+
+
+# ---------------------------------------------------------------------------
+# stacking / sharding / service: realism rows behave like any other row
+# ---------------------------------------------------------------------------
+
+def _realism_spec():
+    base = ScenarioConfig(windows=W, eval_every=1, algo="star", tech="4g")
+    return SweepSpec(
+        "realism_mini", base=base,
+        axes={"battery_mj": (None, 25.0), "drift": ("none", "rotate")},
+        label="b{battery_mj}_d{drift}").with_seeds(2)
+
+
+def test_realism_fields_are_host_side_and_stack_bitwise():
+    hs = set(host_side_fields())
+    assert {"battery_mj", "drift", "byz_frac", "robust_agg"} <= hs
+    spec = _realism_spec()
+    ref = spec.run(DATA, stack="off").to_json()
+    assert spec.run(DATA, stack="auto").to_json() == ref
+    assert spec.run(
+        DATA, parallel="hosts:channel=inline,n=2").to_json() == ref
+
+
+def test_service_streamed_realism_matches_sequential_bitwise():
+    from repro.service.client import ServiceClient
+    from repro.service.server import make_server
+
+    spec = _realism_spec()
+    ref = spec.run(DATA).to_json()
+    httpd, _ = make_server(backend="hosts:channel=inline,n=2")
+    thread = threading.Thread(target=httpd.serve_forever, daemon=True)
+    thread.start()
+    try:
+        client = ServiceClient(httpd.server_address[:2])
+        out = client.run(spec, DATA, cache="off")
+        assert out.to_json() == ref
+    finally:
+        httpd.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# validation: fail fast, and city-mode restrictions
+# ---------------------------------------------------------------------------
+
+def test_validate_config_rejects_bad_realism_knobs():
+    for kw in (dict(battery_mj=0.0), dict(battery_mj=-3.0),
+               dict(byz_frac=-0.1), dict(byz_frac=1.5),
+               dict(drift="melt"), dict(robust_agg="median"),
+               dict(algo="edge_only", battery_mj=5.0),
+               dict(algo="edge_only", byz_frac=0.1)):
+        with pytest.raises((ValueError, KeyError)):
+            validate_config(ScenarioConfig(windows=2, **kw))
+    # city mode: battery churn is supported, the host-loop knobs are not
+    city = ScenarioConfig(windows=2, algo="star", engine="scan",
+                          fleet_size=16, obs_per_dc=4, train_iters=3)
+    validate_config(dataclasses.replace(city, battery_mj=3.0))
+    for kw in (dict(drift="rotate"), dict(byz_frac=0.2),
+               dict(robust_agg="trim")):
+        with pytest.raises(ValueError, match="city"):
+            validate_config(dataclasses.replace(city, **kw))
+
+
+def test_realism_presets_expand_and_validate():
+    for name in ("churn", "drift", "byzantine", "realism"):
+        spec = get_preset(name, windows=3)
+        runs = spec.configs()
+        assert runs
+        for _, cfg in runs:
+            validate_config(cfg)

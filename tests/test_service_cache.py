@@ -189,13 +189,80 @@ def test_cache_spills_to_disk_and_warms_a_restart(tmp_path):
     assert second.get("unknown") is None
 
 
-def test_cache_evicts_insertion_order():
+def test_cache_evicts_true_lru_not_insertion_order():
+    """A hit refreshes recency: the hottest key must survive eviction
+    even when it was inserted first."""
     cache = ResultCache(max_entries=2)
-    for i in range(3):
-        cache.put(f"k{i}", f"v{i}")
-    assert cache.get("k0") is None              # evicted
-    assert cache.get("k1") == "v1"
+    cache.put("k0", "v0")
+    cache.put("k1", "v1")
+    assert cache.get("k0") == "v0"              # k0 is now most-recent
+    cache.put("k2", "v2")                       # evicts k1, NOT k0
+    assert cache.get("k1") is None
+    assert cache.get("k0") == "v0"
     assert cache.get("k2") == "v2"
     assert cache.stats()["entries"] == 2
+    # a re-put of an existing key also refreshes recency
+    cache.put("k0", "v0b")
+    cache.put("k3", "v3")                       # evicts k2
+    assert cache.get("k2") is None
+    assert cache.get("k0") == "v0b"
     with pytest.raises(ValueError):
         ResultCache(max_entries=0)
+
+
+def test_cache_disk_hit_counts_separately(tmp_path):
+    cache = ResultCache(directory=str(tmp_path / "c"))
+    cache.put("k", "v")
+    warm = ResultCache(directory=str(tmp_path / "c"))
+    hit0 = statsd.counter("service.cache.hit")
+    disk0 = statsd.counter("service.cache.hit_disk")
+    assert warm.get("k") == "v"                 # served from disk
+    assert statsd.counter("service.cache.hit_disk") == disk0 + 1
+    assert statsd.counter("service.cache.hit") == hit0
+    assert warm.get("k") == "v"                 # now memory-resident
+    assert statsd.counter("service.cache.hit") == hit0 + 1
+    assert statsd.counter("service.cache.hit_disk") == disk0 + 1
+
+
+def test_cache_concurrent_same_key_puts_never_serve_partials(tmp_path):
+    """16 threads hammer put/get on the SAME key: every get (memory or
+    disk path) must observe one of the exact written payloads, never a
+    torn/partial file — the mkstemp-per-writer atomicity satellite."""
+    import threading
+
+    d = str(tmp_path / "c")
+    cache = ResultCache(directory=d)
+    payloads = [f"payload-{i:02d}-" + "x" * 4096 for i in range(16)]
+    valid = set(payloads)
+    errors = []
+    barrier = threading.Barrier(16)
+
+    def hammer(i):
+        barrier.wait()
+        try:
+            for _ in range(25):
+                cache.put("hot", payloads[i])
+                got = cache.get("hot")
+                if got not in valid:
+                    errors.append(f"thread {i} read a torn value "
+                                  f"({len(got or '')} bytes)")
+                # fresh instance: forces the disk read path
+                got = ResultCache(directory=d).get("hot")
+                if got is not None and got not in valid:
+                    errors.append(f"thread {i} read a torn FILE "
+                                  f"({len(got)} bytes)")
+        except Exception as e:                         # noqa: BLE001
+            errors.append(f"thread {i}: {type(e).__name__}: {e}")
+
+    threads = [threading.Thread(target=hammer, args=(i,))
+               for i in range(16)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert errors == []
+    # no temp-file litter: every mkstemp file was renamed or unlinked
+    import os
+    leftovers = [f for f in os.listdir(d) if f.endswith(".tmp")]
+    assert leftovers == []
+    assert cache.get("hot") in valid

@@ -290,7 +290,16 @@ def test_cancel_stops_pending_shards_and_streams_terminal(
     assert sub["n_shards"] == 2
     assert _GateChannel.started.wait(30)
     assert client.status(sub["job"])["state"] == "running"
-    client.cancel(sub["job"])
+    # cancellation is a capability: the job id alone must not suffice
+    with pytest.raises(ClientError) as err:
+        client.cancel(sub["job"], "not-the-token")
+    assert err.value.status == 403
+    with pytest.raises(ClientError) as err:
+        client._request("POST", f"/v1/jobs/{sub['job']}/cancel")
+    assert err.value.status == 403
+    assert client.status(sub["job"])["state"] == "running"
+    assert "cancel_token" not in client.status(sub["job"])
+    client.cancel(sub["job"], sub["cancel_token"])
     _GateChannel.release.set()
     events = list(client.stream_events(sub["job"]))
     assert events[-1]["event"] == "error"
