@@ -783,6 +783,74 @@ def bench_sweep_service(quick: bool):
     ]
 
 
+def bench_pareto(quick: bool):
+    """Cost-accuracy Pareto auto-tuner (DESIGN.md §14): what halving
+    pruning buys over the exhaustive grid. Runs the ``pareto`` preset
+    through the exhaustive search (every candidate at full budget) and
+    successive halving, reporting wall-clock and window-evaluation cost,
+    recovered-frontier completeness (halving's frontier vs the
+    exhaustive one), and the frontier itself (energy mJ vs F1 — the
+    paper's 94%-for-2% story as a searched curve). Writes
+    results/benchmarks/pareto.json."""
+    from benchmarks.paper_tables import RESULTS_DIR
+    from repro.core.experiment import get_preset
+    from repro.core.pareto import get_search
+    from repro.data.synthetic_covtype import make_covtype_like
+
+    data = make_covtype_like(seed=0)
+    spec = get_preset("pareto", windows=8 if quick else 24,
+                      n_seeds=1 if quick else 2)
+    searches = {"exhaustive": "exhaustive",
+                "halving": "halving:rungs=3,keep=0.5"}
+    results, walls = {}, {}
+    for label, s in searches.items():
+        search = get_search(s)
+        search.run(spec, data)             # warm the jit at rung shapes
+        t0 = time.time()
+        results[label] = search.run(spec, data)
+        walls[label] = (time.time() - t0) * 1e6
+
+    ex, hv = results["exhaustive"], results["halving"]
+    ex_front = ex.frontier_labels()
+    recovered = [lbl for lbl in hv.frontier_labels() if lbl in ex_front]
+    completeness = len(recovered) / len(ex_front)
+    payload = {
+        "preset": "pareto",
+        "rows": len(spec.rows()),
+        "windows": spec.rows()[0][1].windows,
+        "seeds": max(1, len(spec.seeds)),
+        "searches": searches,
+        "exhaustive_wall_us": round(walls["exhaustive"], 1),
+        "halving_wall_us": round(walls["halving"], 1),
+        "halving_speedup": round(walls["exhaustive"] / walls["halving"],
+                                 3),
+        "halving_cost": hv.cost,
+        "exhaustive_cost": ex.cost,
+        "frontier_completeness": completeness,
+        "frontier": [p.as_dict() for p in ex.frontier],
+        "halving_frontier": [p.as_dict() for p in hv.frontier],
+        "halving_ledger_counts": hv.dominated_counts(),
+        "schedule": hv.schedule,
+        "note": "completeness = |halving frontier ∩ exhaustive frontier|"
+                " / |exhaustive frontier| (pareto-smoke gates it at 1.0 "
+                "on the smoke budget); costs are window-evaluations "
+                "including the final bitwise frontier rerun",
+    }
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "pareto.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+    return [
+        ("pareto_halving", walls["halving"],
+         f"exhaustive_us={walls['exhaustive']:.0f} "
+         f"speedup={payload['halving_speedup']:.2f}x "
+         f"completeness={completeness:.2f} "
+         f"frontier={len(ex_front)}/{len(spec.rows())}"),
+        ("pareto_frontier_cost", float(hv.cost["evals_windows"]),
+         f"exhaustive_windows={hv.cost['exhaustive_windows']} "
+         f"savings={hv.cost['savings_pct']}%"),
+    ]
+
+
 def bench_realism(quick: bool):
     """Realism axis (DESIGN.md §13): what churn, drift and byzantine
     collectors cost. Runs the fleet engine once per knob against a shared
@@ -915,7 +983,8 @@ def main():
                 bench_hosts_launcher, bench_sweep_service, bench_greedytl,
                 bench_greedytl_incremental,
                 bench_fleet_engine, bench_stacked_sweep,
-                bench_fleet_scaling, bench_realism, bench_kernels,
+                bench_fleet_scaling, bench_realism, bench_pareto,
+                bench_kernels,
                 bench_htl_trainer, bench_dryrun_summary]
     if not args.skip_tables:
         sections.insert(

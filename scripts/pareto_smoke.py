@@ -1,0 +1,125 @@
+#!/usr/bin/env python
+"""Pareto auto-tuner CI gate (DESIGN.md §14): the halving search may
+prune cost, never correctness.
+
+On the ``pareto`` preset at the gate budget it asserts:
+
+1. **frontier recovery** — the successive-halving search recovers
+   exactly the frontier the exhaustive grid (``rungs=1`` over every
+   candidate at full budget) produces — same labels, same order;
+2. **bitwise frontier** — the search's ``frontier_result`` JSON is
+   byte-identical to a plain ``SweepSpec.run`` of the frontier configs
+   (:func:`repro.core.pareto.frontier_spec`), clean of any search-path
+   influence — the same contract every engine/backend gate pins;
+3. the search actually *searched*: at least one candidate was pruned
+   before the final rung, the ledger covers every candidate exactly
+   once, and the rung schedule grows monotonically to the full budget;
+4. ``ParetoResult`` JSON round-trips losslessly.
+
+    python scripts/pareto_smoke.py --windows 6 --seeds 1
+
+Wired into scripts/verify.sh (gates phase) and the named
+``pareto-smoke`` CI step, mirroring scripts/churn_smoke.py.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def first_diff(a: str, b: str, context: int = 60) -> str:
+    k = next((i for i, (x, y) in enumerate(zip(a, b)) if x != y),
+             min(len(a), len(b)))
+    return (f"first divergence at byte {k}: "
+            f"...{a[max(0, k - context):k + context]!r} vs "
+            f"...{b[max(0, k - context):k + context]!r}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="pareto")
+    ap.add_argument("--windows", type=int, default=6)
+    ap.add_argument("--seeds", type=int, default=1)
+    ap.add_argument("--search", default="halving:rungs=3,keep=0.5",
+                    help="the pruning search under test")
+    args = ap.parse_args()
+
+    from repro.core.experiment import get_preset
+    from repro.core.pareto import ParetoResult, frontier_spec, get_search
+    from repro.data.synthetic_covtype import make_covtype_like
+
+    data = make_covtype_like(seed=0)
+    spec = get_preset(args.preset, windows=args.windows,
+                      n_seeds=args.seeds)
+    rows = spec.rows()
+    rc = 0
+
+    exhaustive = get_search("exhaustive").run(spec, data)
+    search = get_search(args.search)
+    result = search.run(spec, data)
+
+    # 1. frontier recovery: pruning never loses a Pareto-optimal config
+    if result.frontier_labels() == exhaustive.frontier_labels():
+        print(f"pareto smoke [recovery]: OK — {args.search} recovered "
+              f"the exhaustive frontier "
+              f"{result.frontier_labels()} over {len(rows)} candidates")
+    else:
+        print(f"pareto smoke [recovery]: MISMATCH — search frontier "
+              f"{result.frontier_labels()} != exhaustive "
+              f"{exhaustive.frontier_labels()}")
+        rc = 1
+
+    # 2. bitwise frontier: the reported numbers ARE a plain SweepSpec.run
+    direct = frontier_spec(spec, result.frontier_labels()).run(data)
+    got = result.frontier_result.to_json()
+    ref = direct.to_json()
+    if got == ref:
+        print(f"pareto smoke [bitwise]: OK — frontier SweepResult "
+              f"identical to direct SweepSpec.run ({len(ref)} bytes)")
+    else:
+        print(f"pareto smoke [bitwise]: MISMATCH — {first_diff(ref, got)}")
+        rc = 1
+
+    # 3. the search searched: pruning happened, the ledger is complete,
+    #    the budget schedule is monotone and ends at the full budget
+    counts = result.dominated_counts()
+    pruned = counts.get("pruned", 0)
+    if pruned < 1:
+        print(f"pareto smoke [pruning]: no candidate was pruned "
+              f"(ledger: {counts}) — the halving path never ran")
+        rc = 1
+    ledger_labels = sorted(e["label"] for e in result.ledger)
+    if ledger_labels != sorted(lbl for lbl, _ in rows):
+        print(f"pareto smoke [ledger]: ledger does not cover the grid "
+              f"exactly once ({len(ledger_labels)} entries, "
+              f"{len(rows)} rows)")
+        rc = 1
+    budgets = [r["windows"] for r in result.schedule]
+    if budgets != sorted(budgets) or budgets[-1] != args.windows:
+        print(f"pareto smoke [schedule]: rung budgets {budgets} are not "
+              f"monotone to the full budget {args.windows}")
+        rc = 1
+    if rc == 0:
+        print(f"pareto smoke [schedule]: OK — rungs {budgets} windows, "
+              f"pruned {pruned}/{len(rows)}, cost "
+              f"{result.cost['evals_windows']} vs exhaustive "
+              f"{result.cost['exhaustive_windows']} window-evals")
+
+    # 4. lossless artifact
+    clone = ParetoResult.from_json(result.to_json())
+    if clone != result:
+        print("pareto smoke [json]: ParetoResult round-trip drifted")
+        rc = 1
+
+    if rc == 0:
+        print("pareto auto-tuner: halving recovers the exhaustive "
+              "frontier, and frontier metrics are bitwise a plain "
+              "SweepSpec.run")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,6 +20,13 @@ sequential in-process reference (DESIGN.md §12):
 4. the fleet-health counters moved the way the passes imply (shard oks,
    crash failures on the injected pass).
 
+With ``--statsd-e2e`` the gate additionally binds a loopback UDP
+listener, points ``REPRO_STATSD_ADDR`` at it *before* any repro import
+(the statsd singleton reads the env once), and after the passes drains
+every datagram and validates it against the DogStatsD line grammar —
+the metrics pipeline checked end to end on the wire, not just
+in-process.
+
     python scripts/service_parity.py --preset smoke --windows 3 \
         --spec "hosts:channel=local,n=2,retries=1" --inject-failures
     python scripts/service_parity.py --preset transport_grid --windows 3 \
@@ -32,10 +39,71 @@ from __future__ import annotations
 
 import argparse
 import os
+import re
+import socket
 import sys
 import threading
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# DogStatsD line grammar (what a telegraf/datadog agent parses):
+#   <name>:<value>|<type>[|#tag:value,tag:value,...]
+# with c|g|ms types and dotted metric names (ROADMAP: validate the
+# datagram format end to end, not just in-process).
+STATSD_LINE = re.compile(
+    r"^(?P<name>[A-Za-z][A-Za-z0-9_.]*):"
+    r"(?P<value>-?\d+(\.\d+)?([eE][-+]?\d+)?)"
+    r"\|(?P<kind>c|g|ms)"
+    r"(\|#(?P<tags>[A-Za-z0-9_.]+:[^,|]*(,[A-Za-z0-9_.]+:[^,|]*)*))?$")
+
+
+def check_statsd(udp: socket.socket) -> int:
+    """Drain and validate every UDP datagram the service/launcher
+    emitted during the passes: each line must parse against the
+    DogStatsD grammar, carry the ``repro.`` namespace, and the traffic
+    must include counters AND timers plus the known submit series."""
+    time.sleep(0.2)                 # let in-flight loopback packets land
+    lines = []
+    while True:
+        try:
+            payload, _ = udp.recvfrom(65536)
+        except BlockingIOError:
+            break
+        lines.append(payload.decode("ascii", "replace"))
+    rc = 0
+    if not lines:
+        print("statsd e2e: no UDP datagrams received — emission never "
+              "happened")
+        return 1
+    bad = [ln for ln in lines if not STATSD_LINE.match(ln)]
+    if bad:
+        print(f"statsd e2e: {len(bad)}/{len(lines)} datagrams fail the "
+              f"DogStatsD grammar, e.g. {bad[0]!r}")
+        rc = 1
+    names = {STATSD_LINE.match(ln)["name"] for ln in lines
+             if STATSD_LINE.match(ln)}
+    kinds = {STATSD_LINE.match(ln)["kind"] for ln in lines
+             if STATSD_LINE.match(ln)}
+    off_ns = sorted(n for n in names if not n.startswith("repro."))
+    if off_ns:
+        print(f"statsd e2e: series outside the repro. namespace: "
+              f"{off_ns[:5]}")
+        rc = 1
+    for want in ("c", "ms"):
+        if want not in kinds:
+            print(f"statsd e2e: no |{want} datagram seen (kinds: "
+                  f"{sorted(kinds)})")
+            rc = 1
+    if "repro.service.jobs.submitted" not in names:
+        print(f"statsd e2e: repro.service.jobs.submitted missing from "
+              f"{len(names)} series")
+        rc = 1
+    if rc == 0:
+        print(f"statsd e2e: OK — {len(lines)} datagrams, {len(names)} "
+              f"series, all parse as DogStatsD, kinds "
+              f"{sorted(kinds)}")
+    return rc
 
 
 def first_diff(a: str, b: str, context: int = 60) -> str:
@@ -57,7 +125,21 @@ def main() -> int:
                     help="add a pass with one worker SIGKILLed mid-shard "
                          "on its first attempt (cache bypassed so the "
                          "fault path really runs)")
+    ap.add_argument("--statsd-e2e", action="store_true",
+                    help="bind a loopback UDP listener, point "
+                         "REPRO_STATSD_ADDR at it, and validate every "
+                         "datagram against the DogStatsD grammar")
     args = ap.parse_args()
+
+    udp = None
+    if args.statsd_e2e:
+        # Must happen before any repro import: the statsd singleton
+        # reads REPRO_STATSD_ADDR once at module import.
+        udp = socket.socket(socket.AF_INET, socket.SOCK_DGRAM)
+        udp.bind(("127.0.0.1", 0))
+        udp.setblocking(False)
+        os.environ["REPRO_STATSD_ADDR"] = (
+            f"127.0.0.1:{udp.getsockname()[1]}")
 
     from repro.core.experiment import get_preset
     from repro.data.synthetic_covtype import make_covtype_like
@@ -126,6 +208,9 @@ def main() -> int:
         print(f"service parity: launcher.shard.ok = {ok}, expected >= 1")
         rc = 1
     httpd.shutdown()
+    if udp is not None:
+        rc |= check_statsd(udp)
+        udp.close()
     if rc == 0:
         print("sweep service: bitwise-identical to sequential — streamed"
               + (", under injected worker SIGKILL"

@@ -66,11 +66,13 @@ if [[ "$MODE" == "all" || "$MODE" == "gates" ]]; then
     # sweep-service parity: sweeps submitted over HTTP stream per-shard
     # NDJSON and merge client-side — bitwise-identical to sequential,
     # clean, with one worker SIGKILLed mid-shard, and served from the
-    # exact result cache (DESIGN.md §12)
+    # exact result cache (DESIGN.md §12). --statsd-e2e additionally
+    # validates every emitted UDP datagram against the DogStatsD grammar
     python scripts/service_parity.py --preset smoke --windows 3 \
-        --spec "hosts:channel=local,n=2,retries=1" --inject-failures
+        --spec "hosts:channel=local,n=2,retries=1" --inject-failures \
+        --statsd-e2e
     python scripts/service_parity.py --preset transport_grid --windows 3 \
-        --spec "hosts:channel=inline,n=2,retries=1"
+        --spec "hosts:channel=inline,n=2,retries=1" --statsd-e2e
     # scan-engine parity: the scan-over-windows engine's SweepResult JSON
     # must be byte-identical to the sequential fleet engine (DESIGN.md §10)
     python scripts/scan_parity.py --preset smoke --windows 4
@@ -84,6 +86,10 @@ if [[ "$MODE" == "all" || "$MODE" == "gates" ]]; then
     # mules stop accruing ledger events, F1 stays finite, scan==fleet
     # bitwise under churn (DESIGN.md §13)
     python scripts/churn_smoke.py --windows 6 --battery-mj 25
+    # pareto-smoke: successive-halving search recovers the exhaustive
+    # frontier exactly, and the frontier metrics are bitwise a plain
+    # SweepSpec.run of the frontier configs (DESIGN.md §14)
+    python scripts/pareto_smoke.py --windows 6 --seeds 1
 fi
 
 if [[ "$MODE" == "all" || "$MODE" == "bench" ]]; then

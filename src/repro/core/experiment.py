@@ -651,6 +651,38 @@ def _realism(windows: int = 8, n_seeds: int = 2, engine: str = "fleet",
     )
 
 
+@register_preset("pareto")
+def _pareto(windows: int = 24, n_seeds: int = 2,
+            engine: str = "fleet") -> SweepSpec:
+    """The auto-tuner's candidate grid (DESIGN.md §14): the deployment
+    space the paper enumerated by hand — transport technologies x HTL
+    variant x aggregation heuristic, partial edge offload fractions, and
+    collection policies — as one seeded union. Feed it to a search from
+    :mod:`repro.core.pareto` (``HalvingSearch``/``get_search``) to get
+    the energy/F1 frontier; running it directly is the exhaustive grid
+    the searches are benchmarked against."""
+    base = ScenarioConfig(windows=windows, eval_every=max(1, windows // 6),
+                          engine=engine)
+    b = lambda **kw: dataclasses.replace(base, **kw)       # noqa: E731
+    return SweepSpec.union(
+        "pareto",
+        SweepSpec("edge", base=b(algo="edge_only"), label="edge_only"),
+        SweepSpec("offload", base=b(algo="star"), mode="zip",
+                  axes={"p_edge": (0.5, 0.15, 0.03),
+                        LABEL_AXIS: ("star_4g_edge50", "star_4g_edge15",
+                                     "star_4g_edge3")}),
+        SweepSpec("transports", base=base,
+                  axes={"algo": ("star", "a2a"),
+                        "tech": ("4g", "wifi", "ble", "lora:sf=7")},
+                  variants=(("{algo}_{tech}", {}),
+                            ("{algo}_{tech}_agg", {"aggregate": True}))),
+        SweepSpec("collection", base=b(algo="star", tech="wifi"),
+                  axes={"collection": ("uniform", "bursty:burst=8")},
+                  label="star_wifi_{collection}"),
+        seeds=range(n_seeds),
+    )
+
+
 @register_preset("smoke")
 def _smoke(windows: int = 6, n_seeds: int = 2,
            engine: str = "fleet") -> SweepSpec:

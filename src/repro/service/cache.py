@@ -55,13 +55,21 @@ def dataset_digest(encoded: Mapping[str, Any]) -> str:
     return h.hexdigest()
 
 
-def cache_key(spec_hash: str, data_digest: str, stack: str) -> str:
+def cache_key(spec_hash: str, data_digest: str, stack: str, *,
+              search: str = "") -> str:
     """The exact-result cache key: all inputs of the deterministic sweep
-    function, plus the schema version."""
-    blob = json.dumps({"schema": CACHE_SCHEMA, "spec": spec_hash,
-                       "data": data_digest, "stack": stack},
-                      sort_keys=True, separators=(",", ":"))
-    return hashlib.sha256(blob.encode()).hexdigest()
+    function, plus the schema version. ``search`` is the *canonical*
+    search spec for Pareto-search jobs (DESIGN.md §14) — a search's
+    ``ParetoResult`` is a different pure function of the same grid, so
+    it must never collide with the plain sweep's bytes. It only enters
+    the hashed blob when non-empty, so every pre-search key is
+    unchanged."""
+    blob: Dict[str, Any] = {"schema": CACHE_SCHEMA, "spec": spec_hash,
+                            "data": data_digest, "stack": stack}
+    if search:
+        blob["search"] = search
+    text = json.dumps(blob, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(text.encode()).hexdigest()
 
 
 class ResultCache:

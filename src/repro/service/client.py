@@ -94,11 +94,14 @@ class ServiceClient:
 
     # -- the service API -----------------------------------------------------
     def submit(self, spec: SweepSpec, data: Any, *, stack: str = "auto",
-               backend: Optional[str] = None,
-               cache: str = "use") -> Dict[str, Any]:
+               backend: Optional[str] = None, cache: str = "use",
+               search: str = "") -> Dict[str, Any]:
         """POST the sweep; returns the submit reply (job id, shard
         partition, cache key, ``cached`` flag). ``data`` is a
-        :class:`Dataset` or an already-encoded wire payload."""
+        :class:`Dataset` or an already-encoded wire payload. A non-empty
+        ``search`` spec (``"halving:rungs=3,keep=0.5"``) makes the job a
+        Pareto search over the grid (DESIGN.md §14) — the reply carries
+        ``kind="search"`` and no shard partition."""
         payload: Dict[str, Any] = {
             "schema": SERVICE_SCHEMA,
             "spec": spec.to_wire(),
@@ -109,6 +112,8 @@ class ServiceClient:
         }
         if backend is not None:
             payload["backend"] = backend
+        if search:
+            payload["search"] = search
         assert_host_only(payload, where="service request")
         return self._request("POST", "/v1/jobs", payload)
 
@@ -233,4 +238,33 @@ class ServiceClient:
         out = SweepResult(name=sub["name"],
                           records=records_from(labels, merger.results()))
         out.meta["service"] = service_meta
+        return out
+
+    def search(self, spec: SweepSpec, data: Any, search: str, *,
+               stack: str = "auto", backend: Optional[str] = None,
+               cache: str = "use",
+               on_rung: Optional[Any] = None) -> "Any":
+        """Submit a Pareto search over ``spec``'s grid and stream its
+        ``rung`` events until the terminal one, then fetch the stored
+        :class:`~repro.core.pareto.ParetoResult` verbatim — the
+        service-side equivalent of ``get_search(search).run(spec, data)``
+        (bitwise, including the embedded frontier ``SweepResult``).
+        ``on_rung(record)`` fires per streamed rung event."""
+        from repro.core.pareto import ParetoResult
+
+        sub = self.submit(spec, data, stack=stack, backend=backend,
+                          cache=cache, search=search)
+        job = sub["job"]
+        if not sub["cached"]:
+            for event in self.stream_events(job):
+                if event["event"] == "rung" and on_rung is not None:
+                    on_rung(event)
+                elif event["event"] == "error":
+                    raise ClientError(500, f"search job {job} "
+                                           f"{event['state']}: "
+                                           f"{event.get('error')}")
+        out = ParetoResult.from_json(self.result_text(job))
+        out.meta["service"] = {"job": job, "key": sub["key"],
+                               "cached": sub["cached"],
+                               "search": sub["search"]}
         return out

@@ -61,6 +61,7 @@ from repro.core.experiment import SweepResult, SweepSpec, records_from
 from repro.core.launcher import HostsExecutor, LauncherError, get_channel
 from repro.core.parallel import (ShardMerger, assert_host_only,
                                  partition_runs)
+from repro.core.pareto import SearchCancelled, get_search
 from repro.core.registry import parse_spec
 from repro.core.scenario import validate_config
 from repro.service.cache import ResultCache, cache_key, dataset_digest
@@ -90,7 +91,7 @@ class Job:
 
     def __init__(self, job_id: str, spec: SweepSpec, stack: str,
                  shards: List[List[int]], key: str, cache_mode: str,
-                 backend: str):
+                 backend: str, search: str = ""):
         self.id = job_id
         self.spec = spec
         self.stack = stack
@@ -98,6 +99,10 @@ class Job:
         self.key = key
         self.cache_mode = cache_mode
         self.backend = backend
+        # "" = plain sweep; otherwise the canonical search spec — the
+        # job runs a Pareto search (DESIGN.md §14) and streams `rung`
+        # events instead of per-shard payloads
+        self.search = search
         self.state = "queued"   # queued|running|done|failed|cancelled
         self.cached = False
         # capability token: returned once in the submit reply, required
@@ -152,6 +157,8 @@ class Job:
         with self.cond:
             return {"job": self.id, "state": self.state,
                     "cached": self.cached, "name": self.spec.name,
+                    "kind": "search" if self.search else "sweep",
+                    "search": self.search,
                     "n_shards": len(self.shards),
                     "shards_done": self.shards_done,
                     "attempts_total": self.attempts_total,
@@ -232,6 +239,13 @@ class SweepService:
             raise ServiceError(400, "submit payload needs an encoded "
                                     "dataset under 'data' (launcher wire "
                                     "codec)")
+        search = payload.get("search", "")
+        search_spec = ""
+        if search:
+            try:
+                search_spec = get_search(search).spec
+            except (KeyError, ValueError) as e:
+                raise ServiceError(400, f"bad search spec {search!r}: {e}")
         try:
             spec = SweepSpec.from_wire(payload["spec"])
             runs = spec.configs()
@@ -241,17 +255,23 @@ class SweepService:
             raise ServiceError(400, f"bad SweepSpec payload: {e}")
         executor = self._executor(backend)
         cfgs = [c for _, c in runs]
-        shards = [list(s) for s in
-                  partition_runs(cfgs, self._shard_count(executor)) if s]
+        # search jobs stream rung events, not per-shard payloads: the
+        # executor shards each rung internally, so the submit reply
+        # carries no client-mergeable partition
+        shards = [] if search_spec else \
+            [list(s) for s in
+             partition_runs(cfgs, self._shard_count(executor)) if s]
         key = cache_key(spec.canonical_hash(), dataset_digest(encoded),
-                        stack)
+                        stack, search=search_spec)
         with self._lock:
             self._n_jobs += 1
             job_id = f"job-{self._n_jobs:06d}"
             job = Job(job_id, spec, stack, shards, key, cache_mode,
-                      backend)
+                      backend, search=search_spec)
             self._jobs[job_id] = job
         statsd.increment("service.jobs.submitted")
+        if search_spec:
+            statsd.increment("service.jobs.search")
 
         cached_text = (self.cache.get(key) if cache_mode == "use" else
                        None)
@@ -270,6 +290,8 @@ class SweepService:
             thread.start()
         return {"schema": SERVICE_SCHEMA, "job": job.id,
                 "cached": job.cached, "name": spec.name,
+                "kind": "search" if search_spec else "sweep",
+                "search": search_spec,
                 "n_runs": len(runs), "n_shards": len(shards),
                 "shards": job.shards, "key": key,
                 "cancel_token": job.cancel_token}
@@ -293,10 +315,12 @@ class SweepService:
                 job.state = "running"
             t0 = time.monotonic()
             try:
+                data = decode_dataset(encoded)
+                if job.search:
+                    return self._run_search(job, executor, data, t0)
                 runs = job.spec.configs()
                 labels = [l for l, _ in runs]
                 cfgs = [c for _, c in runs]
-                data = decode_dataset(encoded)
 
                 def on_shard(k: int, response: Dict[str, Any]) -> None:
                     assert_host_only(response,
@@ -326,6 +350,9 @@ class SweepService:
                     self.cache.put(job.key, job.result_text)
                 job.finish("done")
                 statsd.increment("service.jobs.completed")
+            except SearchCancelled as e:
+                job.finish("cancelled", error=str(e))
+                statsd.increment("service.jobs.cancelled")
             except LauncherError as e:
                 state = "cancelled" if job.stop.is_set() else "failed"
                 job.finish(state, error=str(e))
@@ -339,6 +366,36 @@ class SweepService:
                 with self._lock:
                     self._running -= 1
                 self._update_gauges()
+
+    def _run_search(self, job: Job, executor: HostsExecutor,
+                    data: Any, t0: float) -> None:
+        """A Pareto-search job (DESIGN.md §14): the search drives the
+        job's *fresh* executor rung by rung (fault-injection params
+        stay job-local, exactly like plain sweeps), streaming one
+        ``rung`` event per rung instead of per-shard payloads. The
+        stored/cached bytes are the ``ParetoResult`` JSON — whose
+        embedded ``frontier_result`` is bitwise a plain ``SweepSpec.run``
+        of the frontier configs, so cache hits stay exact."""
+        search = get_search(job.search)
+
+        def on_rung(record: Dict[str, Any]) -> None:
+            assert_host_only(record, where="service stream event")
+            if job.t_first_shard is None:
+                job.t_first_shard = time.monotonic()
+            with job.cond:
+                job.shards_done += 1      # rungs done, for status()
+            job.append_event(dict(record, event="rung"))
+
+        result = search.run(job.spec, data, stack=job.stack,
+                            parallel=executor, on_rung=on_rung,
+                            stop=job.stop)
+        job.result_text = result.to_json()
+        if job.cache_mode != "off":
+            self.cache.put(job.key, job.result_text)
+        job.finish("done")
+        statsd.increment("service.jobs.completed")
+        statsd.timing("service.search.wall_ms",
+                      (time.monotonic() - t0) * 1e3)
 
     # -- queries ------------------------------------------------------------
     def job(self, job_id: str) -> Job:
@@ -374,6 +431,10 @@ class SweepService:
         return job.result_text
 
     def result_page(self, job_id: str, page: int, per_page: int) -> str:
+        if self.job(job_id).search:
+            raise ServiceError(400, f"job {job_id} is a search; its "
+                                    f"ParetoResult does not page — GET "
+                                    f"the full result")
         full = SweepResult.from_json(self.result_text(job_id))
         try:
             return full.page(page, per_page).to_json(include_meta=True)

@@ -1,0 +1,236 @@
+"""Pareto auto-tuner (DESIGN.md §14): slack-dominance order properties,
+successive-halving schedule/pruning invariants, the search spec grammar,
+the lossless ``ParetoResult`` artifact, and the service search path.
+
+The hard promises under test: slack dominance is a strict partial order
+(so pruning is consistent no matter the comparison order); ``keep=1.0``
+degrades to the exhaustive search; no rung prunes a config the
+full-budget exhaustive frontier keeps (the recovery property
+scripts/pareto_smoke.py gates at the CI budget); and a search served
+over the RPC control plane is byte-identical to the in-process run.
+"""
+import functools
+import threading
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # deterministic shim, tests/_hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core.experiment import get_preset
+from repro.core.pareto import (HalvingSearch, ParetoPoint, ParetoResult,
+                               dominates, frontier_spec, get_search,
+                               pareto_frontier, subset_spec)
+from repro.data.synthetic_covtype import make_covtype_like
+from repro.service.client import ClientError, ServiceClient
+from repro.service.server import make_server
+
+DATA = make_covtype_like(n_total=1400, seed=0)
+WINDOWS = 2
+
+
+def _points(vals):
+    return [ParetoPoint(label=f"p{i}", f1=f1, energy_mj=e)
+            for i, (f1, e) in enumerate(vals)]
+
+
+@functools.lru_cache(maxsize=None)
+def _grid():
+    """Shared mini-grid: smoke preset at 2 windows, plus its exhaustive
+    search result (every candidate at full budget) as the oracle."""
+    spec = get_preset("smoke", windows=WINDOWS)
+    exhaustive = get_search("exhaustive").run(spec, DATA)
+    return spec, exhaustive
+
+
+# ---------------------------------------------------------------------------
+# slack dominance is a strict partial order
+# ---------------------------------------------------------------------------
+
+POINT_SETS = st.lists(st.tuples(st.floats(0.0, 1.0),
+                                st.floats(1.0, 100.0)),
+                      min_size=1, max_size=10)
+SLACKS = st.tuples(st.sampled_from([0.0, 0.02]),
+                   st.sampled_from([0.0, 0.05]))
+
+
+@settings(max_examples=40, deadline=None)
+@given(vals=POINT_SETS, slacks=SLACKS)
+def test_dominance_is_a_strict_partial_order(vals, slacks):
+    f1_slack, energy_slack = slacks
+    pts = _points(vals)
+
+    def dom(a, b):
+        return dominates(a, b, f1_slack=f1_slack,
+                         energy_slack=energy_slack)
+
+    for a in pts:
+        assert not dom(a, a)                      # irreflexive
+        for b in pts:
+            if dom(a, b):
+                assert not dom(b, a)              # asymmetric
+            for c in pts:
+                if dom(a, b) and dom(b, c):
+                    assert dom(a, c)              # transitive
+
+
+@settings(max_examples=40, deadline=None)
+@given(vals=POINT_SETS, slacks=SLACKS)
+def test_frontier_is_sound_complete_and_order_preserving(vals, slacks):
+    f1_slack, energy_slack = slacks
+    pts = _points(vals)
+    front = pareto_frontier(pts, f1_slack=f1_slack,
+                            energy_slack=energy_slack)
+    kept = {p.label for p in front}
+    for p in pts:
+        dominated = any(
+            dominates(q, p, f1_slack=f1_slack, energy_slack=energy_slack)
+            for q in pts if q.label != p.label)
+        assert (p.label in kept) == (not dominated)
+    # frontier preserves candidate order (a subsequence of the input)
+    order = [p.label for p in pts if p.label in kept]
+    assert [p.label for p in front] == order
+
+
+def test_slack_only_ever_prunes_less():
+    # a barely-better point dominates with zero slack but not past it
+    a = ParetoPoint(label="a", f1=0.801, energy_mj=100.0)
+    b = ParetoPoint(label="b", f1=0.800, energy_mj=100.0)
+    assert dominates(a, b)
+    assert not dominates(a, b, f1_slack=0.02)
+    c = ParetoPoint(label="c", f1=0.8, energy_mj=99.0)
+    assert dominates(c, b)
+    assert not dominates(c, b, energy_slack=0.05)
+    with pytest.raises(ValueError):
+        dominates(a, b, f1_slack=-0.1)
+
+
+# ---------------------------------------------------------------------------
+# halving schedule invariants (pure, no runs)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(full=st.integers(min_value=1, max_value=96),
+       rungs=st.integers(min_value=1, max_value=5),
+       eta=st.sampled_from([2.0, 3.0]))
+def test_rung_budgets_monotone_and_final_rung_is_full(full, rungs, eta):
+    s = HalvingSearch(rungs=rungs, eta=eta)
+    ws = [s.rung_windows(full, r) for r in range(rungs)]
+    assert ws == sorted(ws)
+    assert ws[-1] == full
+    assert all(1 <= w <= full for w in ws)
+
+
+@settings(max_examples=40, deadline=None)
+@given(n_seeds=st.integers(min_value=1, max_value=6),
+       rungs=st.integers(min_value=1, max_value=4))
+def test_rung_seeds_are_prefixes_growing_to_all(n_seeds, rungs):
+    s = HalvingSearch(rungs=rungs)
+    seeds = tuple(range(n_seeds))
+    per_rung = [s.rung_seeds(seeds, r) for r in range(rungs)]
+    for sub in per_rung:
+        assert sub == seeds[:len(sub)] and len(sub) >= 1
+    assert per_rung[-1] == seeds
+
+
+# ---------------------------------------------------------------------------
+# the search searched — and never lost an optimal config (real runs)
+# ---------------------------------------------------------------------------
+
+def test_keep_one_is_the_exhaustive_search():
+    spec, exhaustive = _grid()
+    full = get_search("halving:rungs=2,keep=1.0").run(spec, DATA)
+    assert full.dominated_counts().get("pruned", 0) == 0
+    assert full.frontier_labels() == exhaustive.frontier_labels()
+    assert (full.frontier_result.to_json()
+            == exhaustive.frontier_result.to_json())
+
+
+def test_no_rung_prunes_a_full_budget_optimal_point():
+    spec, exhaustive = _grid()
+    optimal = set(exhaustive.frontier_labels())
+    result = get_search("halving:rungs=2,keep=0.5").run(spec, DATA)
+    pruned = {lbl for r in result.schedule for lbl in r["pruned_labels"]}
+    assert not (optimal & pruned)
+    assert result.frontier_labels() == exhaustive.frontier_labels()
+    # the ledger covers the grid exactly once
+    assert sorted(e["label"] for e in result.ledger) == \
+        sorted(lbl for lbl, _ in spec.rows())
+
+
+def test_frontier_result_is_bitwise_a_plain_sweep_run():
+    spec, exhaustive = _grid()
+    direct = frontier_spec(spec, exhaustive.frontier_labels()).run(DATA)
+    assert exhaustive.frontier_result.to_json() == direct.to_json()
+
+
+def test_pareto_result_json_round_trips_losslessly():
+    _, exhaustive = _grid()
+    clone = ParetoResult.from_json(exhaustive.to_json())
+    assert clone == exhaustive
+    assert clone.to_json() == exhaustive.to_json()
+
+
+# ---------------------------------------------------------------------------
+# spec grammar
+# ---------------------------------------------------------------------------
+
+def test_search_grammar_rejects_unknown_and_invalid():
+    with pytest.raises(KeyError):
+        get_search("simulated_annealing")
+    with pytest.raises(ValueError):
+        get_search("halving:rungs=0")
+    with pytest.raises(ValueError):
+        get_search("halving:keep=1.5")
+    with pytest.raises(ValueError):
+        get_search("halving:eta=0.5")
+
+
+def test_search_spec_canonicalizes_param_order_and_float_spelling():
+    a = get_search("halving:keep=0.5,rungs=2")
+    b = get_search("halving:rungs=2,keep=0.5")
+    c = get_search("halving:rungs=2,keep=.5,eta=2")
+    assert a.spec == b.spec == c.spec
+
+
+def test_subset_spec_rejects_empty_and_frontier_spec_unknown_label():
+    spec, _ = _grid()
+    with pytest.raises(ValueError):
+        subset_spec("empty", [])
+    with pytest.raises(KeyError):
+        frontier_spec(spec, ["not_a_label"])
+
+
+# ---------------------------------------------------------------------------
+# the service search path (DESIGN.md §12 + §14)
+# ---------------------------------------------------------------------------
+
+def test_service_search_is_bitwise_the_in_process_run():
+    spec, _ = _grid()
+    local = get_search("halving:rungs=2,keep=0.5").run(spec, DATA)
+    httpd, _service = make_server(backend="hosts:channel=inline,n=2")
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    try:
+        client = ServiceClient(httpd.server_address[:2])
+        rungs = []
+        out = client.search(spec, DATA, "halving:rungs=2,keep=0.5",
+                            on_rung=rungs.append)
+        assert out.to_json() == local.to_json()
+        assert [e["rung"] for e in rungs] == [0, 1]
+        assert out.meta["service"]["cached"] is False
+        # a respelled search spec hits the exact result cache
+        again = client.search(spec, DATA, "halving:keep=0.5,rungs=2")
+        assert again.meta["service"]["cached"] is True
+        assert again.to_json() == local.to_json()
+        # search jobs have no record pages
+        with pytest.raises(ClientError) as err:
+            client.result_page(out.meta["service"]["job"], 0, 5)
+        assert err.value.status == 400
+        # and a bogus search spec is a structured 400 at submit
+        with pytest.raises(ClientError) as err:
+            client.submit(spec, DATA, search="halving:rungs=0")
+        assert err.value.status == 400
+    finally:
+        httpd.shutdown()
